@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables and
+uniform row formatting (name, us_per_call, derived)."""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List
+
+import jax
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float = 0.0, **derived) -> Dict[str, Any]:
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+def print_rows(rows: List[Dict[str, Any]]):
+    for r in rows:
+        d = ";".join(f"{k}={v}" for k, v in r["derived"].items())
+        print(f"{r['name']},{r['us_per_call']:.1f},{d}")
+
+
+def banner(title: str):
+    print(f"\n=== {title} " + "=" * max(0, 70 - len(title)))

@@ -1,0 +1,75 @@
+"""Paper Fig. 4: quantization exploration for KWS — REAL QAT training runs at
+each bit width on the synthetic MFCC stand-in, plotting validation accuracy
+against BOPs.
+
+This is the paper's key codesign result to reproduce qualitatively: accuracy
+holds from FP32 down to ~3 bits, then falls off a cliff below 3 bits — and
+BOPs shrink superlinearly with bit width."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import banner, print_rows, row
+from repro.core.codesign import train_tiny
+from repro.data.synthetic import SyntheticMFCC
+from repro.models.tiny import KWSMLP
+
+
+def _train_at_bits(bits: int, steps: int = 160, dim: int = 64, width: int = 48):
+    """Small same-structure KWS MLP for speed; 32 = float baseline."""
+    model = KWSMLP(in_dim=dim, width=width, weight_bits=bits, act_bits=bits)
+    data = SyntheticMFCC(dim=dim, seed=0)
+    params = model.init(jax.random.PRNGKey(bits))
+    w = jnp.asarray(1.0 / data.class_probs())
+    w = w / jnp.sum(w) * 12
+
+    def loss_fn(ps, batch):
+        x, y = batch
+        logits, _ = model.apply(ps, x, train=False)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, y[:, None], 1)[:, 0]
+        return jnp.mean((lse - lab) * w[y])
+
+    def batch_fn(s):
+        x, y = data.batch(s, 64)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    params, _ = train_tiny(loss_fn, params, batch_fn, steps=steps, lr=2e-3)
+    x, y = data.batch(55_555, 600, balanced=True)
+    logits, _ = model.apply(params, jnp.asarray(x), train=False)
+    acc = float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean())
+    return acc, model.cost().bops
+
+
+def run():
+    banner("Fig 4: KWS quantization exploration (REAL QAT at each width)")
+    rows = []
+    results = {}
+    for bits in (32, 8, 6, 4, 3, 2, 1):
+        acc, bops = _train_at_bits(bits)
+        results[bits] = acc
+        rows.append(row(
+            f"fig4/W{bits}A{bits}",
+            accuracy=f"{acc:.3f}",
+            bops=f"{bops:.3e}",
+            paper_point=("FP32 ref" if bits == 32 else
+                         "chosen (3-bit)" if bits == 3 else ""),
+        ))
+    cliff = results[3] - results[2]
+    hold = results[32] - results[3]
+    rows.append(row(
+        "fig4/summary",
+        acc_drop_fp32_to_3bit=f"{hold:.3f}",
+        acc_drop_3bit_to_2bit=f"{cliff:.3f}",
+        cliff_below_3_bits=bool(cliff > hold),
+        paper_finding="accuracy holds to 3 bits, drops sharply below",
+    ))
+    print_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,113 @@
+"""Paper Table 3: resource deltas from the generic optimizations (FIFO-depth
+sizing, ReLU merging, both).
+
+FPGA resources (BRAM/FF/LUT) map to the TPU compile-time analogues:
+  * buffer elems  <- FIFO depths from the dataflow simulation (BRAM)
+  * HLO op count  <- dataflow stages/logic (LUT)
+  * temp bytes    <- XLA temp allocation for the compiled forward (FF/BRAM)
+
+Four variants of the AD/IC-style stack are compiled: unfused graph with
+unbounded buffers, +buffer-opt, +ReLU/BN merging, +both — same ladder as the
+paper's Table 3 rows. The merged variant additionally runs as ONE fused
+Pallas stage (kernels/qmatmul) vs 4 separate XLA ops."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import banner, print_rows, row, time_call
+from repro.core.dataflow import BIG_DEPTH, mlp_pipeline_stages, optimize_fifo_depths
+from repro.launch.hlo_analysis import parse_computations
+
+DIMS = [128, 72, 72, 8, 72, 72, 128]
+
+
+def _unfused_forward(params, x):
+    """Separate dataflow stages: matmul / +bias / BN / ReLU / quant."""
+    h = x
+    for p in params:
+        h = h @ p["w"]
+        h = h + p["b"]
+        h = p["gamma"] * (h - p["mu"]) / jnp.sqrt(p["sigma2"] + 1e-3) + p["beta"]
+        h = jax.nn.relu(h)
+        s = jnp.max(jnp.abs(h)) / 127.0 + 1e-9
+        h = jnp.round(h / s) * s
+    return h
+
+
+def _fused_forward(params, x):
+    """Folded BN + merged ReLU + quant in one affine stage (paper C3)."""
+    h = x
+    for p in params:
+        v = p["gamma"] / jnp.sqrt(p["sigma2"] + 1e-3)
+        w = p["w"] * v[None, :]
+        b = v * (p["b"] - p["mu"]) + p["beta"]
+        h = jax.nn.relu(h @ w + b)
+        s = jnp.max(jnp.abs(h)) / 127.0 + 1e-9
+        h = jnp.round(h / s) * s
+    return h
+
+
+def _params(key):
+    ps = []
+    for i in range(len(DIMS) - 1):
+        k = jax.random.fold_in(key, i)
+        d_in, d_out = DIMS[i], DIMS[i + 1]
+        ps.append({
+            "w": jax.random.normal(k, (d_in, d_out)) * d_in ** -0.5,
+            "b": jnp.zeros(d_out), "gamma": jnp.ones(d_out),
+            "beta": jnp.zeros(d_out), "mu": jnp.zeros(d_out),
+            "sigma2": jnp.ones(d_out),
+        })
+    return ps
+
+
+def _hlo_stats(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    txt = compiled.as_text()
+    comps = parse_computations(txt)
+    n_ops = sum(len(c.ops) for c in comps.values())
+    mem = compiled.memory_analysis()
+    return n_ops, int(getattr(mem, "temp_size_in_bytes", 0))
+
+
+def run():
+    banner("Table 3: fusion + buffer-opt resource ladder (AD-family stack)")
+    params = _params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (196, 128))
+
+    ops_unfused, temp_unfused = _hlo_stats(_unfused_forward, params, x)
+    ops_fused, temp_fused = _hlo_stats(_fused_forward, params, x)
+
+    stages = mlp_pipeline_stages(DIMS, reuse_factor=4)
+    fifo = optimize_fifo_depths(stages, n_tokens=256)
+    big_elems = BIG_DEPTH * (len(stages) + 1)
+    opt_elems = fifo["total_buffer_elems"]
+
+    t_unfused = time_call(jax.jit(_unfused_forward), params, x)
+    t_fused = time_call(jax.jit(_fused_forward), params, x)
+
+    rows = [
+        row("table3/without_opt", t_unfused, hlo_ops=ops_unfused,
+            temp_bytes=temp_unfused, buffer_elems=big_elems,
+            paper_row="477 BRAM / 79177 FF / 66838 LUT"),
+        row("table3/with_fifo_opt", t_unfused, hlo_ops=ops_unfused,
+            temp_bytes=temp_unfused, buffer_elems=opt_elems,
+            paper_row="278 BRAM / 72686 FF / 58515 LUT"),
+        row("table3/with_relu_bn_merge", t_fused, hlo_ops=ops_fused,
+            temp_bytes=temp_fused, buffer_elems=big_elems,
+            paper_row="345 BRAM / 72921 FF / 55292 LUT"),
+        row("table3/with_all_opt", t_fused, hlo_ops=ops_fused,
+            temp_bytes=temp_fused, buffer_elems=opt_elems,
+            paper_row="146 BRAM / 66430 FF / 46969 LUT"),
+    ]
+    print_rows(rows)
+    print(f"op reduction from merging: {ops_unfused} -> {ops_fused} "
+          f"({1 - ops_fused/ops_unfused:.0%}); buffer reduction: "
+          f"{big_elems} -> {opt_elems} elems")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Table 5: latency and energy per inference for each submitted model.
+
+FPGA wall-clock/Joulescope measurements become the TPU-v5e roofline model
+(latency = max(compute, memory) term; energy = board power x latency) from
+core.codesign.deploy_report, next to the paper's measured Pynq-Z2 numbers.
+A real CPU wall-time of the jitted batch-1 forward is reported as a sanity
+column (relative ordering only)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import banner, print_rows, row, time_call
+from repro.core.codesign import deploy_report
+from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
+
+
+def run():
+    banner("Table 5: latency + energy per inference (TPU roofline model)")
+    models = {
+        "IC-hls4ml": (ICModel(), lambda m: (m, jnp.ones((1, 32, 32, 3))), 8,
+                      "27.3 ms / 44330 uJ (paper Pynq-Z2)"),
+        "IC-FINN-CNV": (CNVModel(), lambda m: (m, jnp.ones((1, 32, 32, 3))), 1,
+                        "1.5 ms / 2535 uJ (paper)"),
+        "AD-hls4ml": (ADAutoencoder(), lambda m: (m, jnp.ones((1, 128))), 8,
+                      "19 us / 30.1 uJ (paper)"),
+        "KWS-FINN": (KWSMLP(), lambda m: (m, jnp.ones((1, 490))), 3,
+                     "17 us / 30.9 uJ (paper)"),
+    }
+    rows = []
+    for name, (model, mk, bits, paper) in models.items():
+        m, x = mk(model)
+        params = m.init(jax.random.PRNGKey(0))
+
+        def fwd(p, x):
+            out = m.apply(p, x, train=False)
+            return out[0] if isinstance(out, tuple) else out
+
+        us_cpu = time_call(jax.jit(fwd), params, x)
+        rep = deploy_report(m.cost(), batch=1, bits=bits)
+        rows.append(row(
+            f"table5/{name}", us_cpu,
+            tpu_roofline_latency_us=f"{rep['latency_us']:.2f}",
+            tpu_energy_uJ=f"{rep['energy_uJ']:.2f}",
+            bound=rep["bound"],
+            bops=f"{rep['bops']:.3e}",
+            wm_kbits=f"{rep['wm_bits']/1e3:.0f}",
+            paper_row=paper,
+        ))
+    print_rows(rows)
+    print("note: tiny batch-1 models are memory-bound on TPU (weights stream "
+          "dominates), same conclusion as the paper's on-chip-weights design")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""End-to-end LM training driver: a ~100M-param llama3-family model trained
+for a few hundred steps on the synthetic token stream, with the full
+production stack — sharded data pipeline, fault-tolerant loop, atomic
+checkpointing, QAT weight fake-quant optional.
+
+Scaled for this CPU container by default (--preset cpu: ~3M params, 200
+steps, minutes); --preset 100m builds the real ~100M config (what you'd run
+on a TPU slice with the same code).
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 200] [--preset cpu]
+     # kill it mid-run and re-run: it resumes from the last checkpoint.
+"""
+
+import argparse
+import dataclasses
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import SyntheticTokens
+from repro.models.model import Model
+from repro.optim.adamw import make_optimizer
+from repro.train.loop import LoopConfig, run_training
+from repro.train.steps import TrainState, make_train_step
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+
+def build_cfg(preset: str):
+    base = get_config("llama3-8b")
+    if preset == "100m":
+        # ~100M params: 12L x 512d x 8H, 16k vocab
+        return dataclasses.replace(
+            base, name="llama3-100m", n_layers=12, d_model=512, n_heads=8,
+            n_kv_heads=4, d_ff=1792, vocab=16384, head_dim=64,
+            dtype="float32", remat="none")
+    # cpu preset: small enough to run 200 steps in minutes
+    return dataclasses.replace(
+        base, name="llama3-cpu", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=2048, head_dim=32,
+        dtype="float32", remat="none", weight_bits=8)   # QAT on
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--preset", choices=["cpu", "100m"], default="cpu")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.preset)
+    model = Model(cfg)
+    print(f"arch={cfg.name}  params={cfg.n_params()/1e6:.1f}M  "
+          f"weight_bits={cfg.weight_bits} (QAT {'on' if cfg.weight_bits < 16 else 'off'})")
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer(base_lr=3e-4, warmup=20, total=args.steps)
+    state = TrainState(params=params, opt=opt.init(params))
+    train_step = jax.jit(make_train_step(model, opt,
+                                         microbatches=args.microbatches),
+                         donate_argnums=(0,))
+
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq)
+
+    with DataPipeline(lambda s: data.batch(s, args.batch)) as pipe:
+        it = iter(pipe)
+
+        def batch_fn(step):
+            # pipeline is keyed by step; keep it aligned on resume
+            while True:
+                s, b = next(it)
+                if s >= step:
+                    return {k: jnp.asarray(v) for k, v in b.items()}
+
+        lcfg = LoopConfig(total_steps=args.steps, ckpt_every=50,
+                          ckpt_dir=args.ckpt_dir, log_every=10)
+        t0 = time.time()
+        res = run_training(train_step, state, batch_fn, lcfg)
+        dt = time.time() - t0
+
+    first = res.metrics_history[0]["loss"] if res.metrics_history else float("nan")
+    last = res.metrics_history[-1]["loss"] if res.metrics_history else float("nan")
+    toks = args.batch * args.seq * (res.final_step - (res.resumed_from or 0))
+    print(f"\ndone: steps={res.final_step} resumed_from={res.resumed_from} "
+          f"loss {first:.3f} -> {last:.3f}")
+    print(f"throughput: {toks/dt:.0f} tok/s on {jax.device_count()} device(s)")
+    assert last < first, "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+# The paper's primary contribution as a composable library:
+#   quantizers  - arbitrary-precision QAT (C1)
+#   qlayers     - QDense / QConv / QDenseBatchNorm folding (C3)
+#   streamline  - integer multi-threshold deployment graphs (C2)
+#   bops        - BOPs / WM / inference-cost metrics (C7, Eqs. 1-2)
+#   search      - ASHA + BO-lite hardware-aware NAS (C7)
+#   dataflow    - FIFO-depth optimization for dataflow pipelines (C5)
+#   qir         - QONNX-style interchange format (C8)
+#   codesign    - the end-to-end §5 methodology driver

@@ -1,0 +1,118 @@
+"""Hardware-cost metrics: BOPs, weight memory, inference cost C, FLOPs.
+
+Implements the paper's Eq. 1 / Eq. 2 verbatim:
+
+  BOPs ~= m*n*k^2 * (b_a*b_w + b_a + b_w + log2(n*k^2))          (Eq. 1)
+  C     = 0.5 * (BOPs/BOPs_ref + WM/WM_ref)                      (Eq. 2)
+
+plus FLOPs counting for float models (the Fig. 2 x-axis) and the
+6*N*D model-FLOPs rule used by the LM-scale roofline (§Roofline).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterable, List, Optional
+
+
+def conv_bops(m: int, n: int, k: int, b_a: int, b_w: int, out_hw: int = 1) -> float:
+    """Eq. 1 for one conv layer, times the number of output positions.
+
+    m: out channels, n: in channels, k: kernel size, out_hw: H_out*W_out.
+    The paper's Eq. 1 counts MACs per output position; multiply by positions
+    for total BOPs of the layer.
+    """
+    per_pos = m * n * k * k * (b_a * b_w + b_a + b_w + math.log2(max(n * k * k, 2)))
+    return per_pos * out_hw
+
+
+def dense_bops(m: int, n: int, b_a: int, b_w: int) -> float:
+    """Eq. 1 with k=1 (fully connected)."""
+    return conv_bops(m, n, 1, b_a, b_w, out_hw=1)
+
+
+def weight_memory_bits(n_weights: int, b_w: int) -> int:
+    """WM: total bits to store the weights."""
+    return n_weights * b_w
+
+
+def inference_cost(bops: float, wm: float, bops_ref: float, wm_ref: float) -> float:
+    """Eq. 2 relative inference cost."""
+    return 0.5 * (bops / bops_ref + wm / wm_ref)
+
+
+@dataclass
+class LayerCost:
+    name: str
+    bops: float
+    wm_bits: int
+    flops: float
+    n_params: int
+
+
+def dense_cost(name, in_dim, out_dim, b_a=8, b_w=8, bias=True) -> LayerCost:
+    n_w = in_dim * out_dim + (out_dim if bias else 0)
+    return LayerCost(
+        name=name,
+        bops=dense_bops(out_dim, in_dim, b_a, b_w),
+        wm_bits=weight_memory_bits(n_w, b_w),
+        flops=2.0 * in_dim * out_dim,
+        n_params=n_w,
+    )
+
+
+def conv_cost(name, in_ch, out_ch, k, out_h, out_w, b_a=8, b_w=8, bias=True) -> LayerCost:
+    n_w = k * k * in_ch * out_ch + (out_ch if bias else 0)
+    return LayerCost(
+        name=name,
+        bops=conv_bops(out_ch, in_ch, k, b_a, b_w, out_hw=out_h * out_w),
+        wm_bits=weight_memory_bits(n_w, b_w),
+        flops=2.0 * k * k * in_ch * out_ch * out_h * out_w,
+        n_params=n_w,
+    )
+
+
+@dataclass
+class ModelCost:
+    layers: List[LayerCost]
+
+    @property
+    def bops(self) -> float:
+        return sum(l.bops for l in self.layers)
+
+    @property
+    def wm_bits(self) -> int:
+        return sum(l.wm_bits for l in self.layers)
+
+    @property
+    def flops(self) -> float:
+        return sum(l.flops for l in self.layers)
+
+    @property
+    def n_params(self) -> int:
+        return sum(l.n_params for l in self.layers)
+
+    def cost_vs(self, ref: "ModelCost") -> float:
+        return inference_cost(self.bops, self.wm_bits, ref.bops, ref.wm_bits)
+
+    def table(self) -> str:
+        rows = [f"{'layer':24s} {'params':>10s} {'BOPs':>14s} {'WM[bits]':>12s} {'FLOPs':>14s}"]
+        for l in self.layers:
+            rows.append(
+                f"{l.name:24s} {l.n_params:>10d} {l.bops:>14.3e} {l.wm_bits:>12d} {l.flops:>14.3e}"
+            )
+        rows.append(
+            f"{'TOTAL':24s} {self.n_params:>10d} {self.bops:>14.3e} {self.wm_bits:>12d} {self.flops:>14.3e}"
+        )
+        return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# LM-scale model FLOPs (used by launch/roofline.py)
+# ---------------------------------------------------------------------------
+
+def lm_model_flops(n_active_params: int, n_tokens: int, training: bool = True) -> float:
+    """6*N*D for training (fwd+bwd), 2*N*D for inference forward."""
+    mult = 6.0 if training else 2.0
+    return mult * n_active_params * n_tokens

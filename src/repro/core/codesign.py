@@ -1,0 +1,121 @@
+"""End-to-end codesign driver — the paper's §5 methodology as one function:
+
+  1. train a float baseline,
+  2. hyperparameter-search the architecture scored by accuracy + BOPs
+     (ASHA or BO, core/search.py),
+  3. lower the bit width until quality degrades ("smallest width retaining
+     the baseline"), Fig. 4's procedure,
+  4. streamline + deploy (integer thresholds), report hardware cost.
+
+Used by examples/mlperf_tiny_*.py and the Fig. 2/3/4 benchmarks with small
+budgets; everything here is dataset- and model-agnostic via callables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# minimal Adam for tiny models (the big stack uses optim/adamw.py)
+# ---------------------------------------------------------------------------
+
+def train_tiny(
+    loss_fn: Callable,            # (params, batch, rngkey) -> scalar
+    params,
+    batch_fn: Callable[[int], Any],
+    steps: int = 200,
+    lr: float = 1e-3,
+    seed: int = 0,
+) -> Tuple[Any, List[float]]:
+    m = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    v = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    @jax.jit
+    def step_fn(params, m, v, batch, t):
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ ** 2, v, g)
+        tf = t.astype(jnp.float32) + 1
+        def upd(p, m_, v_):
+            mh = m_ / (1 - b1 ** tf)
+            vh = v_ / (1 - b2 ** tf)
+            return p - lr * mh / (jnp.sqrt(vh) + eps)
+        params = jax.tree.map(upd, params, m, v)
+        return params, m, v, loss
+
+    losses = []
+    for t in range(steps):
+        batch = batch_fn(t)
+        params, m, v, loss = step_fn(params, m, v, batch, jnp.int32(t))
+        losses.append(float(loss))
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# bit-width descent (Fig. 4 procedure)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BitwidthScanResult:
+    entries: List[Dict]           # bits, accuracy, bops
+    chosen_bits: int
+
+
+def bitwidth_descent(
+    eval_at_bits: Callable[[int], Tuple[float, float]],  # bits -> (quality, bops)
+    bit_ladder: Sequence[int] = (32, 8, 6, 4, 3, 2, 1),
+    tolerance: float = 0.02,
+) -> BitwidthScanResult:
+    """Lower precision until quality drops > tolerance below the float
+    baseline; choose the smallest width that retains it (paper §5)."""
+    entries = []
+    baseline = None
+    chosen = bit_ladder[0]
+    for bits in bit_ladder:
+        q, bops = eval_at_bits(bits)
+        entries.append({"bits": bits, "quality": q, "bops": bops})
+        if baseline is None:
+            baseline = q
+        if q >= baseline - tolerance:
+            chosen = bits
+    return BitwidthScanResult(entries=entries, chosen_bits=chosen)
+
+
+# ---------------------------------------------------------------------------
+# deployment report (the per-model rows of paper Tables 1 / 5)
+# ---------------------------------------------------------------------------
+
+# TPU v5e-style deployment constants for the latency/energy model
+PEAK_INT8_OPS = 394e12      # int8 TOPS per chip
+PEAK_BF16_FLOPS = 197e12
+HBM_BW = 819e9
+CHIP_WATTS = 200.0          # board power envelope (energy model)
+
+
+def deploy_report(model_cost, batch: int = 1, bits: int = 8) -> Dict[str, float]:
+    """Roofline latency + energy per inference for a tiny model on one chip.
+
+    The FPGA latency/energy columns of Table 5 become a TPU roofline model:
+    latency = max(compute-term, memory-term); energy = power x latency.
+    """
+    ops = 2.0 * model_cost.flops / 2.0 * batch      # MACs*2 = flops
+    peak = PEAK_INT8_OPS if bits <= 8 else PEAK_BF16_FLOPS
+    compute_s = model_cost.flops * batch / peak
+    bytes_moved = model_cost.wm_bits / 8 + model_cost.flops * batch / 4  # weights + acts
+    memory_s = bytes_moved / HBM_BW
+    latency = max(compute_s, memory_s, 1e-9)
+    return {
+        "latency_us": latency * 1e6,
+        "energy_uJ": latency * CHIP_WATTS * 1e6,
+        "bound": "memory" if memory_s > compute_s else "compute",
+        "bops": model_cost.bops,
+        "wm_bits": model_cost.wm_bits,
+        "params": model_cost.n_params,
+    }

@@ -1,0 +1,203 @@
+"""QIR — a QONNX-style interchange format for arbitrary-precision QNNs.
+
+The paper's C8: hls4ml and FINN exchange quantized models through QONNX, an
+ONNX extension whose key addition is a ``Quant(bitwidth, scale, zero_point,
+signed, narrow)`` node. QIR is the same idea as a minimal, dependency-free
+JSON graph so the training flow (core/qlayers) and the deployment flow
+(core/streamline + kernels/) share one artifact:
+
+  train (QAT)  --export-->  QIR json  --import-->  streamline/deploy
+
+Supported ops: Dense, Conv2D, BatchNorm, Relu, Quant, MultiThreshold, TopK.
+Weights live in ``initializers`` (name -> ndarray, stored base64 in JSON).
+"""
+
+from __future__ import annotations
+
+import base64
+import dataclasses
+import io
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QuantSpec:
+    bits: int = 8
+    signed: bool = True
+    narrow: bool = False
+    po2_scale: bool = False
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class Node:
+    op: str
+    name: str
+    inputs: List[str]
+    outputs: List[str]
+    attrs: Dict = dataclasses.field(default_factory=dict)
+    quant: Optional[QuantSpec] = None
+
+    def to_dict(self):
+        d = {
+            "op": self.op,
+            "name": self.name,
+            "inputs": self.inputs,
+            "outputs": self.outputs,
+            "attrs": self.attrs,
+        }
+        if self.quant is not None:
+            d["quant"] = self.quant.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d):
+        q = QuantSpec.from_dict(d["quant"]) if "quant" in d else None
+        return cls(d["op"], d["name"], d["inputs"], d["outputs"], d.get("attrs", {}), q)
+
+
+def _enc(a: np.ndarray) -> Dict:
+    buf = io.BytesIO()
+    np.save(buf, np.asarray(a), allow_pickle=False)
+    return {"b64": base64.b64encode(buf.getvalue()).decode("ascii")}
+
+
+def _dec(d: Dict) -> np.ndarray:
+    return np.load(io.BytesIO(base64.b64decode(d["b64"])), allow_pickle=False)
+
+
+@dataclasses.dataclass
+class Graph:
+    nodes: List[Node] = dataclasses.field(default_factory=list)
+    initializers: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    inputs: List[str] = dataclasses.field(default_factory=list)
+    outputs: List[str] = dataclasses.field(default_factory=list)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    # -- serialization ----------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "nodes": [n.to_dict() for n in self.nodes],
+                "initializers": {k: _enc(v) for k, v in self.initializers.items()},
+                "inputs": self.inputs,
+                "outputs": self.outputs,
+                "meta": self.meta,
+            }
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "Graph":
+        d = json.loads(s)
+        return cls(
+            nodes=[Node.from_dict(n) for n in d["nodes"]],
+            initializers={k: _dec(v) for k, v in d["initializers"].items()},
+            inputs=d["inputs"],
+            outputs=d["outputs"],
+            meta=d.get("meta", {}),
+        )
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "Graph":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- execution (reference interpreter) --------------------------------
+    def run(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        import jax.numpy as jnp
+
+        from repro.core.quantizers import IntQuantizer
+        from repro.core.streamline import multi_threshold
+
+        env: Dict[str, np.ndarray] = dict(self.initializers)
+        env.update(feeds)
+        for node in self.nodes:
+            x = [jnp.asarray(env[i]) for i in node.inputs]
+            if node.op == "Dense":
+                y = x[0] @ x[1]
+                if len(x) > 2:
+                    y = y + x[2]
+            elif node.op == "Relu":
+                y = jnp.maximum(x[0], 0)
+            elif node.op == "BatchNorm":
+                xx, gamma, beta, mu, var = x
+                eps = node.attrs.get("eps", 1e-3)
+                y = gamma * (xx - mu) / jnp.sqrt(var + eps) + beta
+            elif node.op == "Quant":
+                q = IntQuantizer(
+                    bits=node.quant.bits,
+                    signed=node.quant.signed,
+                    narrow=node.quant.narrow,
+                )
+                y = q(x[0])
+            elif node.op == "MultiThreshold":
+                y = multi_threshold(x[0].astype(jnp.int32), jnp.asarray(x[1]))
+            elif node.op == "TopK":
+                y = jnp.argmax(x[0], axis=-1)
+            elif node.op == "Mul":
+                y = x[0] * x[1]
+            else:
+                raise NotImplementedError(f"QIR op {node.op}")
+            env[node.outputs[0]] = np.asarray(y)
+        return {o: env[o] for o in self.outputs}
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def export_qmlp(layer_defs, params_list, head_params, meta=None) -> Graph:
+    """Export a QDense/QDenseBatchNorm stack + linear head to QIR."""
+    g = Graph(inputs=["x"], outputs=["logits"], meta=meta or {})
+    prev = "x"
+    for i, (ld, p) in enumerate(zip(layer_defs, params_list)):
+        wname, bname = f"w{i}", f"b{i}"
+        g.initializers[wname] = np.asarray(p["w"])
+        g.initializers[bname] = np.asarray(p["b"])
+        out = f"h{i}_fc"
+        g.nodes.append(Node("Dense", f"dense{i}", [prev, wname, bname], [out]))
+        prev = out
+        if "gamma" in p:
+            for stat in ("gamma", "beta", "mu", "sigma2"):
+                g.initializers[f"{stat}{i}"] = np.asarray(p[stat])
+            out = f"h{i}_bn"
+            g.nodes.append(
+                Node(
+                    "BatchNorm",
+                    f"bn{i}",
+                    [prev, f"gamma{i}", f"beta{i}", f"mu{i}", f"sigma2{i}"],
+                    [out],
+                )
+            )
+            prev = out
+        out = f"h{i}_relu"
+        g.nodes.append(Node("Relu", f"relu{i}", [prev], [out]))
+        prev = out
+        out = f"h{i}_q"
+        g.nodes.append(
+            Node(
+                "Quant",
+                f"quant{i}",
+                [prev],
+                [out],
+                quant=QuantSpec(bits=ld.act_bits, signed=True),
+            )
+        )
+        prev = out
+    g.initializers["w_head"] = np.asarray(head_params["w"])
+    g.initializers["b_head"] = np.asarray(head_params["b"])
+    g.nodes.append(Node("Dense", "head", [prev, "w_head", "b_head"], ["logits"]))
+    return g

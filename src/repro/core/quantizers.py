@@ -1,0 +1,246 @@
+"""Arbitrary-precision quantizers with straight-through estimators.
+
+The paper (C1) trains with quantization-aware training at 1-12 bit precision
+via QKeras / Brevitas. This module is the JAX equivalent: every quantizer is a
+pure function ``q(x) -> x_hat`` whose backward pass is the straight-through
+estimator (identity inside the representable range, zero outside), implemented
+with ``jax.custom_vjp``.
+
+Quantizer zoo (mirrors what the submissions used):
+  * ``FixedPointQuantizer``  - QKeras-style ``quantized_bits(bits, integer)``
+                               (hls4ml IC: 8 total / 2 integer; AD: 6-12 bit)
+  * ``IntQuantizer``         - Brevitas-style signed/unsigned integer with a
+                               learned or static power-of-two / affine scale
+                               (FINN KWS: 3-bit weights+activations)
+  * ``BinaryQuantizer``      - bipolar {-1,+1} (FINN CNV-W1A1)
+  * ``TernaryQuantizer``     - {-1,0,+1} with threshold
+  * ``quantize_po2``         - power-of-two scale helper (shift-only rescale,
+                               the FPGA-friendly scale FINN streamlining uses)
+
+All quantizers expose ``bits`` so the BOPs cost model (core/bops.py) can read
+the precision straight off a model definition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# straight-through rounding primitives
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def ste_round(x):
+    """round-to-nearest-even with identity gradient."""
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+@jax.custom_vjp
+def ste_clip(x, lo, hi):
+    """clip whose gradient is 1 inside [lo, hi] and 0 outside (saturating STE)."""
+    return jnp.clip(x, lo, hi)
+
+
+def _ste_clip_fwd(x, lo, hi):
+    return jnp.clip(x, lo, hi), (x, lo, hi)
+
+
+def _ste_clip_bwd(res, g):
+    x, lo, hi = res
+    mask = jnp.logical_and(x >= lo, x <= hi).astype(g.dtype)
+    return (g * mask, None, None)
+
+
+ste_clip.defvjp(_ste_clip_fwd, _ste_clip_bwd)
+
+
+@jax.custom_vjp
+def ste_sign(x):
+    """bipolar sign with clipped-identity gradient (BinaryNet hard-tanh STE)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _ste_sign_fwd(x):
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype), x
+
+
+def _ste_sign_bwd(x, g):
+    mask = (jnp.abs(x) <= 1.0).astype(g.dtype)
+    return (g * mask,)
+
+
+ste_sign.defvjp(_ste_sign_fwd, _ste_sign_bwd)
+
+
+# ---------------------------------------------------------------------------
+# scale helpers
+# ---------------------------------------------------------------------------
+
+def quantize_po2(scale, lo=2.0 ** -24, hi=2.0 ** 24):
+    """Snap a positive scale to the nearest power of two.
+
+    FINN's streamlining prefers po2 scales because on an FPGA they are free
+    bit-shifts; on TPU they stay exact across bf16 rescales, so we keep the
+    option and use it for threshold folding (core/streamline.py).
+    """
+    scale = jnp.clip(scale, lo, hi)
+    return 2.0 ** jnp.round(jnp.log2(scale))
+
+
+def minmax_scale(x, qmax, axis=None, keepdims=True, eps=1e-8):
+    """Symmetric per-tensor / per-channel scale from the max-abs statistic."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.maximum(amax, eps) / qmax
+
+
+# ---------------------------------------------------------------------------
+# quantizer definitions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointQuantizer:
+    """QKeras ``quantized_bits(bits, integer, keep_negative=1)`` equivalent.
+
+    Value grid: step = 2^(integer - (bits-1)) for signed numbers; the
+    representable range is [-2^integer, 2^integer - step].
+    """
+
+    bits: int = 8
+    integer: int = 2
+    signed: bool = True
+
+    @property
+    def step(self) -> float:
+        frac_bits = self.bits - self.integer - (1 if self.signed else 0)
+        return 2.0 ** (-frac_bits)
+
+    @property
+    def qmin(self) -> float:
+        return -(2.0 ** self.integer) if self.signed else 0.0
+
+    @property
+    def qmax(self) -> float:
+        return 2.0 ** self.integer - self.step
+
+    def __call__(self, x):
+        x = ste_clip(x, self.qmin, self.qmax)
+        return ste_round(x / self.step) * self.step
+
+    def int_repr(self, x):
+        """Integer code for a (already clipped) value — used by streamlining."""
+        return jnp.round(jnp.clip(x, self.qmin, self.qmax) / self.step).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntQuantizer:
+    """Brevitas-style integer quantizer with a runtime (min-max) scale.
+
+    ``q(x) = clip(round(x / s), qmin, qmax) * s`` with s per-tensor or
+    per-channel (``axis``). ``po2`` snaps the scale to a power of two.
+    """
+
+    bits: int = 8
+    signed: bool = True
+    axis: Optional[int] = None
+    po2: bool = False
+    narrow: bool = False  # symmetric range [-qmax, qmax] (weights)
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.signed else 2 ** self.bits - 1
+
+    @property
+    def qmin(self) -> int:
+        if not self.signed:
+            return 0
+        return -self.qmax if self.narrow else -(2 ** (self.bits - 1))
+
+    def scale(self, x):
+        if self.axis is None:
+            s = minmax_scale(x, self.qmax)
+        else:
+            s = minmax_scale(x, self.qmax, axis=self.axis, keepdims=True)
+        if self.po2:
+            s = quantize_po2(s)
+        return jax.lax.stop_gradient(s)
+
+    def __call__(self, x):
+        s = self.scale(x)
+        q = ste_round(x / s)
+        q = ste_clip(q, float(self.qmin), float(self.qmax))
+        return q * s
+
+    def quantize_int(self, x):
+        """Return (int codes, scale) — the deployment-side representation."""
+        s = self.scale(x)
+        q = jnp.clip(jnp.round(x / s), self.qmin, self.qmax)
+        dt = jnp.int8 if self.bits <= 8 else jnp.int32
+        return q.astype(dt), s
+
+
+@dataclasses.dataclass(frozen=True)
+class BinaryQuantizer:
+    """Bipolar {-scale,+scale} quantizer (CNV-W1A1)."""
+
+    bits: int = 1
+    scale_value: float = 1.0
+
+    def __call__(self, x):
+        return ste_sign(x) * self.scale_value
+
+
+@dataclasses.dataclass(frozen=True)
+class TernaryQuantizer:
+    """{-1, 0, +1} * scale with dead-zone threshold (default 0.5*E|x|-ish)."""
+
+    bits: int = 2
+    threshold: float = 0.05
+
+    def __call__(self, x):
+        pos = (x > self.threshold).astype(x.dtype)
+        neg = (x < -self.threshold).astype(x.dtype)
+        hard = pos - neg
+        # STE: gradient of identity within [-1, 1]
+        return hard + (ste_clip(x, -1.0, 1.0) - jax.lax.stop_gradient(ste_clip(x, -1.0, 1.0)))
+
+
+def make_quantizer(bits: int, kind: str = "int", **kw):
+    """Factory keyed the way configs express precision."""
+    if bits >= 32 or kind == "none":
+        return None
+    if bits == 1 or kind == "binary":
+        return BinaryQuantizer()
+    if kind == "ternary":
+        return TernaryQuantizer()
+    if kind == "fixed":
+        return FixedPointQuantizer(bits=bits, **kw)
+    return IntQuantizer(bits=bits, **kw)
+
+
+# ---------------------------------------------------------------------------
+# activation fake-quant used inside LM blocks (W8A8 path)
+# ---------------------------------------------------------------------------
+
+def fake_quant_act(x, bits: int = 8):
+    """Per-tensor symmetric activation fake-quant (QAT for LM stacks)."""
+    if bits >= 16:
+        return x
+    q = IntQuantizer(bits=bits, signed=True)
+    return q(x)

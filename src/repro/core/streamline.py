@@ -1,0 +1,209 @@
+"""Streamlining: fold float bookkeeping into integer multi-threshold ops.
+
+This is the paper's C2 (§3.5, after Umuroglu & Jahre 2017). For a uniformly
+quantized network, every float chain
+
+    acc(int32) --*s_w*s_a--> float --BN--> float --ReLU--> float --quant--> q_out
+
+is monotonic in the integer accumulator, so it collapses to a bank of integer
+thresholds per output channel:
+
+    q_out = sum_i [ acc >= T[c, i] ]          (i = 1 .. 2^bits - 1)
+
+The deployed graph then contains only int8 weights, int32 accumulators,
+integer threshold compares, and one power-of-two output scale — exactly what
+FINN emits as "multi-threshold" nodes, and what our Pallas kernel
+(kernels/multi_threshold.py) executes on TPU.
+
+Exactness note: the float reference uses round-half-up at quant boundaries
+(thresholds are the half-step points); jnp.round is half-even, so we define
+``quant_act_ref`` with half-up semantics and test against it. Off-boundary
+inputs (measure-1 set) agree with any tie rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qlayers import QDense, QDenseBatchNorm
+from repro.core.quantizers import IntQuantizer, quantize_po2
+
+
+def quant_act_ref(y, s_out: float, qmax: int):
+    """Unsigned activation quant with round-half-up: clip(floor(y/s+0.5),0,qmax)."""
+    return jnp.clip(jnp.floor(y / s_out + 0.5), 0, qmax).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ThresholdDense:
+    """A streamlined (deployment-form) dense stage.
+
+    y_int = multi_threshold(x_int @ w_int, thresholds)  in [0, 2^act_bits - 1]
+    float value of the output = y_int * out_scale.
+    """
+
+    w_int: jnp.ndarray        # (in, out) int8 codes
+    thresholds: jnp.ndarray   # (out, n_steps) int32, sorted along steps
+    out_scale: float          # po2 scalar
+    act_bits: int
+
+    @property
+    def n_steps(self) -> int:
+        return 2 ** self.act_bits - 1
+
+
+def multi_threshold(acc, thresholds):
+    """Reference multi-threshold: out[..., c] = #{i : acc[..., c] >= T[c, i]}.
+
+    acc: (..., C) int32;  thresholds: (C, S) int32  ->  (..., C) int32.
+    """
+    return jnp.sum(
+        acc[..., None] >= thresholds[(None,) * (acc.ndim - 1)], axis=-1
+    ).astype(jnp.int32)
+
+
+def _fold_affine(params, eps: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(k_folded, b_folded) per paper Eqs. 3-4 — works for QDenseBatchNorm
+    params; plain QDense params fold to (w, b)."""
+    if "gamma" in params:
+        v = params["gamma"] / jnp.sqrt(params["sigma2"] + eps)
+        return params["w"] * v[None, :], v * (params["b"] - params["mu"]) + params["beta"]
+    return params["w"], params["b"]
+
+
+def streamline_dense(
+    params,
+    *,
+    weight_bits: int,
+    act_bits: int,
+    in_scale: float,
+    bn_eps: float = 1e-3,
+    relu: bool = True,
+) -> ThresholdDense:
+    """Convert one (QDense[BatchNorm] + ReLU + act-quant) stage to thresholds.
+
+    ``in_scale`` is the float value of one input integer step (the previous
+    stage's out_scale, or the input quant scale for the first layer).
+    """
+    k_folded, b_folded = _fold_affine(params, bn_eps)
+
+    # --- integer weights, per-output-channel symmetric scale -------------
+    wq = IntQuantizer(bits=weight_bits, signed=True, narrow=True, axis=0)
+    w_int, s_w = wq.quantize_int(k_folded)          # s_w: (1, out)
+    s_w = jnp.squeeze(s_w, axis=0)                  # (out,)
+
+    # --- choose a po2 output scale covering the pre-activation range -----
+    # heuristic range: |acc| <= in_qmax * sum|w|; cover the relu output range
+    qmax_out = 2 ** act_bits - 1
+    in_qmax = 2 ** (act_bits - 1) - 1  # inputs assumed same grid width
+    reach = jnp.max(jnp.sum(jnp.abs(k_folded), axis=0) * in_scale * in_qmax + jnp.abs(b_folded))
+    s_out = float(quantize_po2(jnp.maximum(reach, 1e-8) / qmax_out))
+
+    # --- thresholds on the integer accumulator ---------------------------
+    # float preact for channel c:  y = acc * (s_w[c] * in_scale) + b_folded[c]
+    # quant boundary i (half-up):  y >= (i - 0.5) * s_out
+    #  => acc >= ((i - 0.5) * s_out - b[c]) / (s_w[c] * in_scale)
+    steps = jnp.arange(1, qmax_out + 1, dtype=jnp.float32)      # (S,)
+    denom = s_w * in_scale                                      # (out,) > 0
+    bound = (steps[None, :] - 0.5) * s_out                      # (1, S)
+    t_float = (bound - b_folded[:, None]) / denom[:, None]      # (out, S)
+    thresholds = jnp.ceil(t_float).astype(jnp.int32)
+    if not relu:
+        raise NotImplementedError("streamlining currently targets ReLU stages")
+
+    return ThresholdDense(
+        w_int=w_int.astype(jnp.int8),
+        thresholds=thresholds,
+        out_scale=s_out,
+        act_bits=act_bits,
+    )
+
+
+def apply_threshold_dense(stage: ThresholdDense, x_int):
+    """Run one streamlined stage on integer inputs: (..., in) int -> (..., out) int."""
+    acc = jnp.matmul(x_int.astype(jnp.int32), stage.w_int.astype(jnp.int32))
+    return multi_threshold(acc, stage.thresholds)
+
+
+def float_ref_dense(params, x, *, weight_bits, act_bits, s_out, bn_eps=1e-3):
+    """The float-graph reference for one stage (fold -> quant w -> relu -> quant)."""
+    k_folded, b_folded = _fold_affine(params, bn_eps)
+    wq = IntQuantizer(bits=weight_bits, signed=True, narrow=True, axis=0)
+    w_int, s_w = wq.quantize_int(k_folded)
+    w_hat = w_int.astype(jnp.float32) * s_w
+    y = x @ w_hat + b_folded
+    y = jax.nn.relu(y)
+    qmax = 2 ** act_bits - 1
+    return quant_act_ref(y, s_out, qmax)
+
+
+@dataclasses.dataclass
+class StreamlinedMLP:
+    """A fully streamlined MLP: integer in, integer threshold stages, one
+    final float affine head (logits don't need quantizing — paper §3.1.1
+    removes softmax since max(logits) suffices)."""
+
+    in_scale: float
+    stages: List[ThresholdDense]
+    head_w: jnp.ndarray
+    head_b: jnp.ndarray
+    head_w_int: Optional[jnp.ndarray] = None
+    head_scale: Optional[jnp.ndarray] = None
+
+    def __call__(self, x_int):
+        h = x_int
+        for st in self.stages:
+            h = apply_threshold_dense(st, h)
+        # final stage: int accumulation, single float rescale at the very end
+        last_scale = self.stages[-1].out_scale if self.stages else self.in_scale
+        logits = h.astype(jnp.float32) @ self.head_w * last_scale + self.head_b
+        return logits
+
+    def predict(self, x_int):
+        return jnp.argmax(self(x_int), axis=-1)
+
+
+def streamline_mlp(layer_defs: Sequence, params_list: Sequence, in_scale: float,
+                   head_params, bn_eps: float = 1e-3) -> StreamlinedMLP:
+    """Streamline a stack of quantized dense(+BN)+ReLU stages + linear head."""
+    stages = []
+    scale = in_scale
+    for ld, p in zip(layer_defs, params_list):
+        st = streamline_dense(
+            p,
+            weight_bits=ld.weight_bits,
+            act_bits=ld.act_bits,
+            in_scale=scale,
+            bn_eps=bn_eps,
+        )
+        stages.append(st)
+        scale = st.out_scale
+    return StreamlinedMLP(
+        in_scale=in_scale,
+        stages=stages,
+        head_w=head_params["w"],
+        head_b=head_params["b"],
+    )
+
+
+def constant_fold(graph):
+    """QIR constant folding (paper §3.5 step 1): precompute nodes whose inputs
+    are all initializers. Operates on core.qir.Graph."""
+    from repro.core import qir
+
+    changed = True
+    while changed:
+        changed = False
+        for node in list(graph.nodes):
+            if node.op in ("Quant",) and all(i in graph.initializers for i in node.inputs):
+                x = graph.initializers[node.inputs[0]]
+                q = IntQuantizer(bits=node.attrs.get("bits", 8))
+                graph.initializers[node.outputs[0]] = np.asarray(q(jnp.asarray(x)))
+                graph.nodes.remove(node)
+                changed = True
+    return graph

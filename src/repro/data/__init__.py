@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticImages,
+    SyntheticMelWindows,
+    SyntheticMFCC,
+    SyntheticTokens,
+)
+from repro.data.pipeline import DataPipeline  # noqa: F401

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes:
+#   qmatmul         - fused int8 dataflow stage (matmul->dequant->bias->ReLU
+#                     ->requant), the merged-stage form of C2+C3
+#   multi_threshold - FINN integer multi-threshold activation (C2), plus the
+#                     fully fused threshold_matmul stage
+#   flash_attention - VMEM-resident online-softmax attention (C4's "keep the
+#                     working set on chip" applied to the LM archs)
+# ops.py holds the jit'd public wrappers (padding + CPU interpret fallback);
+# ref.py the pure-jnp oracles every kernel is tested against.

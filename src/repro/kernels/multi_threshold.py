@@ -1,0 +1,128 @@
+"""Multi-threshold activation kernel (FINN streamlining, paper C2) and the
+fully fused integer stage: int8 matmul -> int32 accum -> multi-threshold.
+
+The multi-threshold op is the deployed form of (dequant -> BN -> ReLU ->
+requant): for act_bits output bits it compares the integer accumulator
+against S = 2^bits - 1 per-channel thresholds and outputs the count — a pure
+integer op (no float anywhere), executed on the VPU with the thresholds
+resident in VMEM.
+
+Threshold layout: (C, S) is transposed to (S, C) before the kernel so the
+channel axis is the 128-lane minor axis — each of the S compare steps is a
+full-width (bm, C) vector op, and S (= 7 for 3-bit KWS, 255 worst-case) is
+the sequential loop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mt_kernel(acc_ref, thr_ref, o_ref, *, n_steps: int):
+    acc = acc_ref[...]                       # (bm, C) int32
+    out = jnp.zeros_like(acc)
+
+    def body(s, out):
+        t = jax.lax.dynamic_slice_in_dim(thr_ref[...], s, 1, axis=0)  # (1, C)
+        return out + (acc >= t).astype(jnp.int32)
+
+    o_ref[...] = jax.lax.fori_loop(0, n_steps, body, out)
+
+
+def multi_threshold(acc: jnp.ndarray, thresholds: jnp.ndarray, *,
+                    block_m: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """acc (M, C) int32, thresholds (C, S) int32 -> (M, C) int32 in [0, S].
+
+    M must divide block_m (ops.multi_threshold pads); C rides whole in VMEM
+    (tiny-model channel counts: 12-512)."""
+    M, C = acc.shape
+    S = thresholds.shape[1]
+    assert thresholds.shape[0] == C
+    block_m = min(block_m, M)
+    assert M % block_m == 0, (M, block_m)
+    thr_t = thresholds.T.astype(jnp.int32)   # (S, C): lanes = channels
+
+    return pl.pallas_call(
+        functools.partial(_mt_kernel, n_steps=S),
+        grid=(M // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, C), lambda i: (i, 0)),
+            pl.BlockSpec((S, C), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, C), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(acc, thr_t)
+
+
+def _tmm_kernel(x_ref, w_ref, thr_ref, o_ref, acc_ref, *, n_k: int, n_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _threshold():
+        acc = acc_ref[...]
+        out = jnp.zeros_like(acc)
+
+        def body(s, out):
+            t = jax.lax.dynamic_slice_in_dim(thr_ref[...], s, 1, axis=0)
+            return out + (acc >= t).astype(jnp.int32)
+
+        o_ref[...] = jax.lax.fori_loop(0, n_steps, body, out)
+
+
+def threshold_matmul(
+    x_int: jnp.ndarray,            # (M, K) int8/int32
+    w_int: jnp.ndarray,            # (K, N) int8
+    thresholds: jnp.ndarray,       # (N, S) int32
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """One whole streamlined dense stage in a single kernel: the int32
+    accumulator never leaves VMEM between the matmul and the activation."""
+    M, K = x_int.shape
+    K2, N = w_int.shape
+    S = thresholds.shape[1]
+    assert K == K2 and thresholds.shape[0] == N
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    n_k = K // block_k
+    thr_t = thresholds.T.astype(jnp.int32)   # (S, N)
+
+    return pl.pallas_call(
+        functools.partial(_tmm_kernel, n_k=n_k, n_steps=S),
+        grid=(M // block_m, N // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((S, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_int.astype(jnp.int8) if x_int.dtype == jnp.int8 else x_int.astype(jnp.int32),
+      w_int, thr_t)

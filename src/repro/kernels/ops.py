@@ -1,0 +1,130 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, CPU fallback (interpret mode when no TPU
+is attached — the container case), and shape restoration. These are the
+entry points models/benchmarks call; tests sweep them against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import multi_threshold as _mt
+from repro.kernels import qmatmul as _qm
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "out_scale", "block_m",
+                                             "block_n", "block_k", "interpret"))
+def qmatmul(x_int, w_int, scale, bias=None, *, relu=False,
+            out_scale: Optional[float] = None, block_m=128, block_n=128,
+            block_k=128, interpret: Optional[bool] = None):
+    """Fused int8 matmul stage; auto-pads to block multiples."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    M0, K0 = x_int.shape
+    N0 = w_int.shape[1]
+    x_p, _ = _pad_to(x_int, block_m, 0)
+    x_p, _ = _pad_to(x_p, block_k, 1)
+    w_p, _ = _pad_to(w_int, block_k, 0)
+    w_p, _ = _pad_to(w_p, block_n, 1)
+    s_p, _ = _pad_to(jnp.reshape(scale, (-1,)).astype(jnp.float32), block_n, 0)
+    b = (jnp.reshape(bias, (-1,)).astype(jnp.float32) if bias is not None
+         else jnp.zeros((N0,), jnp.float32))
+    b_p, _ = _pad_to(b, block_n, 0)
+    y = _qm.qmatmul(x_p, w_p, s_p, b_p, relu=relu, out_scale=out_scale,
+                    block_m=min(block_m, x_p.shape[0]),
+                    block_n=min(block_n, w_p.shape[1]),
+                    block_k=min(block_k, x_p.shape[1]),
+                    interpret=interp)
+    return y[:M0, :N0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def multi_threshold(acc, thresholds, *, block_m=256,
+                    interpret: Optional[bool] = None):
+    """Multi-threshold activation; auto-pads rows."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    M0 = acc.shape[0]
+    bm = min(block_m, max(M0, 8))
+    acc_p, _ = _pad_to(acc.astype(jnp.int32), bm, 0)
+    y = _mt.multi_threshold(acc_p, thresholds.astype(jnp.int32),
+                            block_m=bm, interpret=interp)
+    return y[:M0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def threshold_matmul(x_int, w_int, thresholds, *, block_m=128, block_n=128,
+                     block_k=128, interpret: Optional[bool] = None):
+    """Fused integer dense stage (matmul + multi-threshold)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    M0, K0 = x_int.shape
+    N0 = w_int.shape[1]
+    x_p, _ = _pad_to(x_int, block_m, 0)
+    x_p, _ = _pad_to(x_p, block_k, 1)
+    w_p, _ = _pad_to(w_int, block_k, 0)
+    w_p, _ = _pad_to(w_p, block_n, 1)
+    # padded output channels need thresholds too; pad with INT32_MAX so the
+    # padded channels output 0 (never reached)
+    t_p = thresholds.astype(jnp.int32)
+    pad_n = (-N0) % block_n
+    if pad_n:
+        t_p = jnp.concatenate(
+            [t_p, jnp.full((pad_n, t_p.shape[1]), jnp.iinfo(jnp.int32).max,
+                           jnp.int32)], axis=0)
+    y = _mt.threshold_matmul(x_p, w_p, t_p,
+                             block_m=min(block_m, x_p.shape[0]),
+                             block_n=min(block_n, w_p.shape[1]),
+                             block_k=min(block_k, x_p.shape[1]),
+                             interpret=interp)
+    return y[:M0, :N0]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    block_q=128, block_k=128,
+                    interpret: Optional[bool] = None):
+    """Flash attention over (B, H, S, D) layout; pads S to block multiples.
+    Padded KV rows are masked exactly inside the kernel via ``kv_len``."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    B, H, Sq0, D = q.shape
+    Sk0 = k.shape[2]
+    bq = min(block_q, max(Sq0, 8))
+    bk = min(block_k, max(Sk0, 8))
+    q_p, _ = _pad_to(q, bq, 2)
+    k_p, _ = _pad_to(k, bk, 2)
+    v_p, _ = _pad_to(v, bk, 2)
+    out = _fa.flash_attention(q_p, k_p, v_p, causal=causal, window=window,
+                              q_offset=q_offset, kv_len=Sk0,
+                              block_q=bq, block_k=bk, interpret=interp)
+    return out[:, :, :Sq0]
+
+
+# re-export oracles for convenience
+qmatmul_ref = ref.qmatmul_ref
+multi_threshold_ref = ref.multi_threshold_ref
+threshold_matmul_ref = ref.threshold_matmul_ref
+flash_attention_ref = ref.flash_attention_ref

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(tests/test_kernels.py sweeps shapes/dtypes and assert_allclose's). They are
+also the portable fallbacks used on CPU.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def qmatmul_ref(
+    x_int: jnp.ndarray,          # (M, K) int8
+    w_int: jnp.ndarray,          # (K, N) int8
+    scale: jnp.ndarray,          # (N,) or (1, N) f32 — s_x * s_w per out channel
+    bias: Optional[jnp.ndarray] = None,   # (N,) f32
+    *,
+    relu: bool = False,
+    out_scale: Optional[float] = None,    # requant: y_int8 = round(y / out_scale)
+) -> jnp.ndarray:
+    """The fused streamlined dataflow stage (paper C2+C3 merged):
+
+        int8 matmul -> int32 accum -> per-channel dequant -> +bias -> ReLU
+        -> (optional) requant to int8.
+
+    Returns f32 (out_scale=None) or int8.
+    """
+    acc = jax.lax.dot_general(
+        x_int.astype(jnp.int32), w_int.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * jnp.reshape(scale, (1, -1))
+    if bias is not None:
+        y = y + jnp.reshape(bias, (1, -1))
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if out_scale is None:
+        return y
+    q = jnp.round(y / out_scale)
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def multi_threshold_ref(acc: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
+    """FINN multi-threshold: out[m, c] = #{ i : acc[m, c] >= T[c, i] }.
+
+    acc: (M, C) int32; thresholds: (C, S) int32 (sorted along S).
+    Output (M, C) int32 in [0, S].
+    """
+    return jnp.sum(
+        acc[:, :, None] >= thresholds[None, :, :], axis=-1
+    ).astype(jnp.int32)
+
+
+def threshold_matmul_ref(x_int, w_int, thresholds) -> jnp.ndarray:
+    """Fused integer stage: int8 matmul -> multi-threshold activation.
+
+    x_int (M, K) int8/int32, w_int (K, N) int8, thresholds (N, S) int32.
+    """
+    acc = jax.lax.dot_general(
+        x_int.astype(jnp.int32), w_int.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return multi_threshold_ref(acc, thresholds)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,              # (B, H, Sq, D)
+    k: jnp.ndarray,              # (B, Hkv, Sk, D)
+    v: jnp.ndarray,              # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,           # absolute position of q[0] (prefill chunks)
+) -> jnp.ndarray:
+    """Dense-softmax oracle with GQA, causal and sliding-window masks."""
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) * (D ** -0.5)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,441 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for params, optimizer state,
+     caches, and batch (jax.eval_shape — zero allocation),
+  3. jits the right entry point (train_step / prefill / decode_step) with
+     explicit in_shardings from the logical rules,
+  4. .lower().compile() — success proves the sharding config is coherent,
+  5. records memory_analysis, cost_analysis, and the static HLO analysis
+     (loop-scaled FLOPs + collective bytes by type) to a JSON artifact that
+     launch/roofline.py and EXPERIMENTS.md consume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+  ... --mesh multi --seq-parallel --quant 8 --remat dots        # variants
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig, shape_applicable
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim.adamw import make_optimizer
+from repro.parallel.sharding import logical_to_spec, use_mesh_rules
+from repro.train.steps import TrainState, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_logical_axes(n_batch: int, mesh) -> Optional[tuple]:
+    """Largest batch sharding that divides n_batch: (pod,data) > (data,) > None."""
+    names = mesh.axis_names
+    cands = []
+    if "pod" in names:
+        cands.append(("pod", "data"))
+    cands.append(("data",))
+    for axes in cands:
+        ways = 1
+        for a in axes:
+            ways *= mesh.shape[a]
+        if n_batch % ways == 0:
+            return axes
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.embed_inputs:
+            toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        else:
+            toks = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+        return {"tokens_or_embeds": toks}
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.embed_inputs:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.mrope:
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return specs
+
+
+def batch_shardings(cfg, shape, mesh, batch_axes_):
+    """NamedSharding tree matching input_specs."""
+    def sh(*axes):
+        return NamedSharding(mesh, P(*axes))
+
+    b = batch_axes_
+    out = {}
+    for k in input_specs(cfg, shape):
+        if k in ("tokens", "labels"):
+            out[k] = sh(b, None)
+        elif k == "embeds":
+            out[k] = sh(b, None, None)
+        elif k == "positions":
+            out[k] = sh(None, b, None)
+        elif k == "tokens_or_embeds":
+            out[k] = sh(b, None) if cfg.embed_inputs else sh(b, None, None)
+    return out
+
+
+def arch_rules(cfg: ArchConfig, mesh, baxes) -> dict:
+    """Per-arch logical-rule fix-ups: a logical axis maps to 'model' only when
+    the corresponding dimension divides the mesh axis (e.g. qwen1.5's 20
+    heads and every GQA kv=8 fall back to replicated on a 16-way model axis;
+    TP then lives on d_ff / vocab / head-flattened dims)."""
+    mw = mesh.shape["model"]
+
+    def fit(n):
+        return ("model",) if n and n % mw == 0 else None
+
+    return {
+        "batch": baxes,
+        "heads": fit(cfg.n_heads),
+        "heads_flat": fit(cfg.n_heads * cfg.hd),  # wo fan-in: flattened H*hd
+        "kv_heads": fit(cfg.n_kv_heads),
+        "vocab": fit(cfg.vocab),
+        "mlp": fit(cfg.d_ff),
+        "model": fit(cfg.d_inner if cfg.has_ssm else cfg.d_model),
+        "kv_seq": ("model",),
+    }
+
+
+# ---------------------------------------------------------------------------
+# named sharding strategies (the §Perf hillclimbing levers)
+# ---------------------------------------------------------------------------
+
+def strategy_rules(name: str, cfg: ArchConfig, mesh, shape) -> dict:
+    """Rule overrides applied on top of arch_rules. Each is one hypothesis in
+    EXPERIMENTS.md §Perf; 'baseline' is the paper-faithful FSDP+TP layout."""
+    names = mesh.axis_names
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in names)
+    if name == "baseline":
+        return {}
+    if name == "seqpar":
+        # sequence-parallel residual stream: inter-layer activations shard S
+        # over the model axis instead of replicating
+        return {"seq": ("model",)}
+    if name == "fsdp2d":
+        # kill tensor parallelism: batch over BOTH axes (pure DP), params
+        # FSDP-sharded over both axes. Needs global_batch % n_devices == 0
+        # and fan-in dims % n_devices == 0 (all assigned archs satisfy this
+        # for train_4k).
+        return {
+            "batch": all_axes, "fsdp": all_axes,
+            "heads": None, "kv_heads": None, "heads_flat": None,
+            "vocab": None, "mlp": None, "model": None, "experts": None,
+            "kv_seq": None,
+        }
+    if name == "tponly":
+        # decode layout: no FSDP — params live sharded over 'model' only, so
+        # no per-token parameter all-gathers; batch stays on data axes
+        return {"fsdp": None}
+    if name == "ep":
+        # expert parallelism: experts over the model axis (MoE archs whose
+        # expert count divides it), TP inside the expert turned off
+        return {"experts": ("model",), "mlp": None}
+    if name == "fsdppod":
+        # multi-pod: extend FSDP over BOTH data-parallel axes so optimizer
+        # state and params halve per device on the 512-chip mesh
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        return {"fsdp": dp}
+    raise ValueError(f"unknown strategy {name}")
+
+
+def combined_strategy_rules(spec: str, cfg, mesh, shape) -> dict:
+    """Comma-separated strategy names, merged left to right."""
+    rules: dict = {}
+    for name in spec.split(","):
+        rules.update(strategy_rules(name.strip(), cfg, mesh, shape))
+    return rules
+
+
+STRATEGIES = ("baseline", "seqpar", "fsdp2d", "tponly", "ep", "fsdppod")
+
+
+# ---------------------------------------------------------------------------
+# per-leaf local (per-device) byte accounting from spec trees
+# ---------------------------------------------------------------------------
+
+def local_bytes(sds_tree, spec_tree, mesh) -> int:
+    total = 0
+    leaves = jax.tree.leaves(sds_tree)
+    specs = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(specs), (len(leaves), len(specs))
+    for leaf, spec in zip(leaves, specs):
+        ways = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                ways *= mesh.shape[ax]
+        total += leaf.size * leaf.dtype.itemsize // ways
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             rules_override: Optional[dict] = None, quant_bits: int = 16,
+             remat: Optional[str] = None, microbatches: int = 1,
+             strategy: Optional[str] = None, attn_impl: Optional[str] = None,
+             out_dir: str = "artifacts/dryrun", tag: str = "baseline",
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if attn_impl:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "quant_bits": quant_bits,
+    }
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        _write(result, out_dir)
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    baxes = batch_logical_axes(shape.global_batch, mesh)
+    rules = arch_rules(cfg, mesh, baxes)
+    if strategy and strategy != "baseline":
+        rules.update(combined_strategy_rules(strategy, cfg, mesh, shape))
+    if rules_override:
+        rules.update(rules_override)
+
+    try:
+        with use_mesh_rules(mesh, rules):
+            model = Model(cfg)
+            pspecs = model.param_specs()
+            params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            if quant_bits < 16 and shape.kind != "train":
+                params_sds = jax.eval_shape(
+                    lambda p: model.quantize_params(p, quant_bits), params_sds
+                )
+                pspecs = _quantized_specs(params_sds, pspecs)
+            psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+            bspec = batch_shardings(cfg, shape, mesh, baxes)
+            bs_sds = input_specs(cfg, shape)
+
+            if shape.kind == "train":
+                opt = make_optimizer()
+                opt_sds = jax.eval_shape(opt.init, params_sds)
+                opt_sh = type(opt_sds)(
+                    step=NamedSharding(mesh, P()),
+                    m=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+                    v=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+                )
+                state_sds = TrainState(params=params_sds, opt=opt_sds)
+                state_sh = TrainState(params=psh, opt=opt_sh)
+                step_fn = make_train_step(model, opt, microbatches=microbatches)
+                jitted = jax.jit(step_fn, in_shardings=(state_sh, bspec),
+                                 donate_argnums=(0,))
+                lowered = jitted.lower(state_sds, bs_sds)
+                state_local = local_bytes(params_sds, pspecs, mesh) + local_bytes(
+                    opt_sds.m, pspecs, mesh) + local_bytes(opt_sds.v, pspecs, mesh)
+                result["cache_local_bytes"] = 0
+            elif shape.kind == "prefill":
+                fn = model.prefill
+                jitted = jax.jit(fn, in_shardings=(psh, bspec))
+                lowered = jitted.lower(params_sds, bs_sds)
+                state_local = local_bytes(params_sds, pspecs, mesh)
+                result["cache_local_bytes"] = 0
+            else:  # decode
+                cache_sds = jax.eval_shape(
+                    lambda: model.cache_init(shape.global_batch, shape.seq_len)
+                )
+                cspecs = model.cache_specs()
+                csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+                tok_sh = bspec["tokens_or_embeds"]
+                jitted = jax.jit(
+                    model.decode_step,
+                    in_shardings=(psh, csh, tok_sh, NamedSharding(mesh, P())),
+                    donate_argnums=(1,),
+                )
+                lowered = jitted.lower(
+                    params_sds, cache_sds, bs_sds["tokens_or_embeds"],
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                )
+                state_local = local_bytes(params_sds, pspecs, mesh)
+                result["cache_local_bytes"] = local_bytes(cache_sds, cspecs, mesh)
+
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo_stats = analyze_hlo(compiled.as_text())
+
+            result.update(
+                status="ok",
+                lower_s=round(t_lower - t0, 2),
+                compile_s=round(t_compile - t_lower, 2),
+                n_devices=int(np.prod(list(mesh.shape.values()))),
+                batch_axes=list(baxes) if baxes else [],
+                params_local_bytes=local_bytes(params_sds, pspecs, mesh),
+                state_local_bytes=state_local,
+                memory_analysis={
+                    k: int(getattr(mem, k))
+                    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                              "temp_size_in_bytes", "alias_size_in_bytes",
+                              "generated_code_size_in_bytes")
+                    if hasattr(mem, k)
+                },
+                xla_cost_analysis={
+                    "flops": float(cost.get("flops", -1.0)),
+                    "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+                },
+                hlo_flops_per_device=float(hlo_stats.flops),
+                collective_bytes_per_device=float(hlo_stats.collective_bytes),
+                collectives_by_type={k: float(v) for k, v in hlo_stats.by_type.items()},
+                collectives_count={k: int(v) for k, v in hlo_stats.by_count.items()},
+            )
+            if verbose:
+                print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ({tag}): OK "
+                      f"compile={result['compile_s']}s "
+                      f"flops/dev={hlo_stats.flops:.3e} "
+                      f"coll B/dev={hlo_stats.collective_bytes:.3e} "
+                      f"params/dev={result['params_local_bytes']/2**30:.2f}GiB")
+                print("  memory_analysis:", result["memory_analysis"])
+    except Exception as e:  # noqa: BLE001 — a failing cell is a recorded bug
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ({tag}): "
+                  f"FAILED {result['error']}")
+    _write(result, out_dir)
+    return result
+
+
+def _quantized_specs(params_sds, pspecs):
+    """Spec tree matching the quantized param structure: w_int inherits w's
+    spec; w_scale keeps the output-channel shards but replicates every axis
+    whose size collapsed to 1 (the fan-in axis — and with scan-stacked layer
+    params that is dim 1, not dim 0)."""
+    def visit(sds, spec):
+        if isinstance(sds, dict) and "w_int" in sds:
+            wspec = spec["w"] if isinstance(spec, dict) and "w" in spec else P()
+            wlist = list(wspec) + [None] * (sds["w_int"].ndim - len(wspec))
+            sshape = sds["w_scale"].shape
+            sspec = P(*[None if sshape[i] == 1 else wlist[i]
+                        for i in range(len(sshape))])
+            out = {"w_int": wspec, "w_scale": sspec}
+            if "b" in sds:
+                out["b"] = spec.get("b", P()) if isinstance(spec, dict) else P()
+            return out
+        if isinstance(sds, dict):
+            return {k: visit(v, spec[k] if isinstance(spec, dict) else spec)
+                    for k, v in sds.items()}
+        return spec
+
+    return visit(params_sds, pspecs)
+
+
+def _write(result: Dict[str, Any], out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    name = (f"{result['arch']}__{result['shape']}__{result['mesh']}"
+            f"__{result.get('tag', 'baseline')}.json")
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--quant", type=int, default=16)
+    ap.add_argument("--remat", choices=["full", "dots", "dots_saveable",
+                                        "none"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--strategy", default=None,
+                    help=f"comma-separated from {STRATEGIES}")
+    ap.add_argument("--attn-impl", choices=["auto", "naive", "chunked"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    rules = {"seq": ("model",)} if args.seq_parallel else None
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            if args.skip_existing:
+                name = (f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                        f"__{args.tag}.json")
+                path = os.path.join(args.out, name)
+                if os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") == "ok":
+                            continue
+            r = run_cell(arch, shape, multi_pod=mp, rules_override=rules,
+                         quant_bits=args.quant, remat=args.remat,
+                         microbatches=args.microbatches,
+                         strategy=args.strategy, attn_impl=args.attn_impl,
+                         out_dir=args.out, tag=args.tag)
+            n_ok += r["status"] == "ok"
+            n_fail += r["status"] == "error"
+            n_skip += r["status"] == "skipped"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped (by assignment), {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

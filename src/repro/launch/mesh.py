@@ -1,0 +1,59 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — smoke tests and benches see 1 CPU device;
+only launch/dryrun.py (which sets XLA_FLAGS before any import) sees 512.
+
+    single-pod:  (16, 16)      -> ("data", "model")        256 chips
+    multi-pod :  (2, 16, 16)   -> ("pod", "data", "model") 512 chips
+
+``make_elastic_mesh`` builds the best-fitting mesh from whatever devices are
+currently alive — the restore path of the elastic-restart story (a failed
+host shrinks the data axis; checkpoint.restore reshards onto the new mesh).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (launch/dryrun.py does this)"
+        )
+    try:
+        return jax.make_mesh(shape, axes, devices=devices[:n])
+    except TypeError:  # older make_mesh without devices kwarg
+        from jax.sharding import Mesh
+
+        return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def make_elastic_mesh(model_parallel: int = 1,
+                      devices: Optional[Sequence] = None):
+    """Best mesh from the devices that are alive: ("data", "model") with the
+    data axis absorbing whatever count remains after TP."""
+    from jax.sharding import Mesh
+
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    mp = max(1, min(model_parallel, n))
+    while n % mp != 0:
+        mp -= 1
+    dp = n // mp
+    return Mesh(np.array(devices[: dp * mp]).reshape(dp, mp), ("data", "model"))
+
+
+def mesh_devices(mesh) -> int:
+    return math.prod(mesh.shape.values()) if hasattr(mesh.shape, "values") else mesh.size

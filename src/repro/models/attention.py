@@ -1,0 +1,349 @@
+"""Attention: GQA + RoPE / M-RoPE / sliding-window, chunked (flash-style)
+softmax for long sequences, and sequence-sharded KV-cache decode.
+
+TPU adaptations worth noting (DESIGN.md §2):
+
+  * ``chunked_attention`` is an online-softmax (flash) attention written in
+    pure jnp with ``lax.scan`` over KV blocks — it never materializes the
+    (S x S) score matrix, which is what makes the 32k-prefill cells lower
+    with bounded memory. The Pallas kernel (kernels/flash_attention.py) is
+    the TPU-optimized twin; this version is the portable oracle the dry-run
+    lowers.
+
+  * ``decode_attention`` writes the softmax over the cache explicitly
+    (max / exp / sum / weighted-sum). With the KV cache sharded along the
+    sequence axis (logical "kv_seq" -> mesh "model"), GSPMD turns those
+    reductions into three tiny all-reduces — a flash-decode collective
+    schedule with no shard_map needed.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dtype, _mx, linear_apply, linear_init
+from repro.parallel.sharding import shard
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ArchConfig, positions):
+    """positions (..., S) -> (cos, sin) of shape (..., S, hd//2)."""
+    hd = cfg.hd
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2) (broadcast over heads)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def mrope_cos_sin(cfg: ArchConfig, positions_thw):
+    """Qwen2-VL multimodal RoPE: positions_thw (3, B, S); head_dim halves are
+    partitioned into (t, h, w) sections (cfg.mrope_sections sums to hd//2)."""
+    sec = cfg.mrope_sections
+    assert sum(sec) == cfg.hd // 2, "mrope sections must sum to head_dim//2"
+    import numpy as np
+
+    cos_all, sin_all = rope_freqs(cfg, positions_thw)       # (3, B, S, hd//2)
+    splits = np.cumsum(sec)[:-1].tolist()
+    cos_parts = jnp.split(cos_all, splits, axis=-1)
+    sin_parts = jnp.split(sin_all, splits, axis=-1)
+    cos = jnp.concatenate([cp[i] for i, cp in enumerate(cos_parts)], axis=-1)
+    sin = jnp.concatenate([sp[i] for i, sp in enumerate(sin_parts)], axis=-1)
+    return cos, sin                                          # (B, S, hd//2)
+
+
+def positions_cos_sin(cfg: ArchConfig, positions):
+    """positions: (B, S) int or (3, B, S) for mrope."""
+    if cfg.mrope:
+        if positions.ndim == 2:  # text-only fallback: same pos for t/h/w
+            positions = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        return mrope_cos_sin(cfg, positions)
+    return rope_freqs(cfg, positions)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ArchConfig):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    H, K, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    return {
+        "wq": linear_init(kq, d, (H, hd), cfg, bias=cfg.qkv_bias),
+        "wk": linear_init(kk, d, (K, hd), cfg, bias=cfg.qkv_bias),
+        "wv": linear_init(kv, d, (K, hd), cfg, bias=cfg.qkv_bias),
+        "wo": linear_init(ko, H * hd, d, cfg, scale=(2 * cfg.n_layers * H * hd) ** -0.5),
+    }
+
+
+def attn_specs(cfg: ArchConfig):
+    fsdp, heads = _mx("fsdp")[0], _mx("heads")[0]
+    kvh, hflat = _mx("kv_heads")[0], _mx("heads_flat")[0]
+    q = {"w": P(fsdp, heads, None)}
+    kv = {"w": P(fsdp, kvh, None)}
+    if cfg.qkv_bias:
+        q["b"] = P(heads, None)
+        kv["b"] = P(kvh, None)
+    return {
+        "wq": q,
+        "wk": dict(kv),
+        "wv": dict(kv),
+        # fan-in of wo is flattened (H*hd,) — shardable even when H itself
+        # does not divide the model axis (e.g. qwen1.5's 20 heads).
+        "wo": {"w": P(hflat, fsdp)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def mask_bias(cfg: ArchConfig, q_pos, k_pos):
+    """Additive mask bias: q_pos (Sq,), k_pos (Sk,) -> (Sq, Sk) float32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if cfg.causal and not cfg.encoder_only:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    if cfg.window > 0:
+        ok = ok & (k_pos[None, :] > q_pos[:, None] - cfg.window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# core attention
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, bias):
+    """q (B,Sq,H,hd), k/v (B,Sk,K,hd), bias (Sq,Sk) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5) + bias[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def live_block_pairs(cfg: ArchConfig, nq: int, nk: int, cq: int, ck: int):
+    """Static (q_block, k_block) pairs that can contain unmasked entries,
+    assuming contiguous monotone positions (true for every call site: train,
+    prefill, and prefill-continuation all use arange positions).
+
+    This is the causal-packing optimization (§Perf, beyond-paper): for causal
+    self-attention only ~half the block pairs survive; for sliding-window
+    attention only O(window/ck) diagonals survive; encoders keep all pairs.
+    """
+    pairs = []
+    for qi in range(nq):
+        q_lo, q_hi = qi * cq, qi * cq + cq - 1
+        for ki in range(nk):
+            k_lo, k_hi = ki * ck, ki * ck + ck - 1
+            if cfg.causal and not cfg.encoder_only and k_lo > q_hi:
+                continue                     # entirely in the future
+            if cfg.window > 0 and k_hi <= q_lo - cfg.window:
+                continue                     # entirely outside the window
+            pairs.append((qi, ki))
+    return pairs
+
+
+def chunked_attention(cfg: ArchConfig, q, k, v, q_pos, k_pos):
+    """Flash-style online-softmax attention over a statically packed set of
+    live (q_block, kv_block) pairs.
+
+    Never materializes more than (B, K, G, cq, ck) scores, and never computes
+    a fully masked block: one lax.scan over the packed pair list carries the
+    online-softmax state of all q blocks and updates the pair's q-block slot
+    in place. Exact masking at block boundaries still comes from mask_bias.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    cq = min(cfg.attn_chunk, Sq)
+    ck = min(cfg.attn_chunk, Sk)
+    assert Sq % cq == 0 and Sk % ck == 0
+    nq, nk = Sq // cq, Sk // ck
+
+    qg = jnp.moveaxis(q.reshape(B, nq, cq, Kh, G, hd), 1, 0)   # (nq,B,cq,K,G,hd)
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, Kh, hd), 1, 0)      # (nk,B,ck,K,hd)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, Kh, hd), 1, 0)
+    qp = q_pos.reshape(nq, cq)
+    kp = k_pos.reshape(nk, ck)
+    scale = hd ** -0.5
+
+    pairs = live_block_pairs(cfg, nq, nk, cq, ck)
+    qidx = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    kidx = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    def pair_step(carry, t):
+        m, l, acc = carry                 # (nq,B,K,G,cq) / " / (nq,...,hd)
+        qi, ki = qidx[t], kidx[t]
+        qb = jax.lax.dynamic_index_in_dim(qg, qi, 0, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kc, ki, 0, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, ki, 0, keepdims=False)
+        qpb = jax.lax.dynamic_index_in_dim(qp, qi, 0, keepdims=False)
+        kpb = jax.lax.dynamic_index_in_dim(kp, ki, 0, keepdims=False)
+        bias = mask_bias(cfg, qpb, kpb)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb).astype(jnp.float32)
+        s = s * scale + bias[None, None, None]
+
+        m_prev = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_prev = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_prev = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        a_new = a_prev * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    m0 = jnp.full((nq, B, Kh, G, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, B, Kh, G, cq), jnp.float32)
+    a0 = jnp.zeros((nq, B, Kh, G, cq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(pair_step, (m0, l0, a0),
+                                  jnp.arange(len(pairs)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]   # (nq, B, K, G, cq, hd)
+    out = jnp.transpose(out, (1, 0, 4, 2, 3, 5)).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(cfg: ArchConfig, q, k_cache, v_cache, cur_index):
+    """Single-token attention against a (possibly seq-sharded) cache.
+
+    q: (B, 1, H, hd); caches: (B, S, K, hd); cur_index: scalar int32 (or
+    (B,) vector for per-slot serving) = number of valid cache positions.
+    Softmax reductions over S are written explicitly so GSPMD lowers them to
+    partial-reduce + small all-reduce when S is sharded (logical "kv_seq").
+    """
+    B, _, H, hd = q.shape
+    S, Kh = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Kh, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) * (hd ** -0.5)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cur = jnp.broadcast_to(jnp.asarray(cur_index), (B,))[:, None, None, None]
+    valid = pos[None, None, None, :] < cur
+    if cfg.window > 0:
+        valid = valid & (pos[None, None, None, :] >= cur - cfg.window)
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)           # all-reduce(max) over kv_seq
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)           # all-reduce(sum)
+    out = jnp.einsum("bkgs,bskh->bkgh", (p / l).astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# full blocks
+# ---------------------------------------------------------------------------
+
+def attn_apply(cfg: ArchConfig, p, x, positions):
+    """Training / prefill forward. x (B,S,d); positions (B,S) or (3,B,S)."""
+    B, S, _ = x.shape
+    q = linear_apply(cfg, p["wq"], x, out_logical=("batch", None, "heads", None))
+    k = linear_apply(cfg, p["wk"], x, out_logical=("batch", None, "kv_heads", None))
+    v = linear_apply(cfg, p["wv"], x, out_logical=("batch", None, "kv_heads", None))
+    cos, sin = positions_cos_sin(cfg, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "chunked" if S > 2048 else "naive"
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    if impl == "chunked":
+        out = chunked_attention(cfg, q, k, v, pos1d[0], pos1d[0])
+    else:
+        bias = mask_bias(cfg, pos1d[0], pos1d[0])
+        out = naive_attention(q, k, v, bias)
+    out = shard(out, ("batch", None, "heads", None))
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return linear_apply(cfg, p["wo"], out, out_logical=("batch", None, None))
+
+
+def attn_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    cache_len = min(max_len, cfg.window) if cfg.window > 0 else max_len
+    shape = (batch, cache_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_cache_specs(cfg: ArchConfig):
+    b, s = _mx("batch")[0], _mx("kv_seq")[0]
+    return {"k": P(b, s, None, None), "v": P(b, s, None, None)}
+
+
+def attn_decode(cfg: ArchConfig, p, x, cache, cur_index):
+    """One decode step. x (B,1,d); cur_index scalar or (B,) per-slot vector.
+    Returns (y, new_cache)."""
+    B = x.shape[0]
+    q = linear_apply(cfg, p["wq"], x)
+    k = linear_apply(cfg, p["wk"], x)
+    v = linear_apply(cfg, p["wv"], x)
+    cur = jnp.broadcast_to(jnp.asarray(cur_index, jnp.int32), (B,))
+    pos = cur[:, None]
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+    cos, sin = positions_cos_sin(cfg, pos)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    S = cache["k"].shape[1]
+    write_idx = jnp.mod(cur, S) if cfg.window > 0 else cur
+    if jnp.ndim(cur_index) == 0:
+        # scalar path: dynamic_update_slice keeps decode cells scatter-free
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, write_idx[0], 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, write_idx[0], 0, 0))
+    else:
+        bidx = jnp.arange(B)
+        k_cache = cache["k"].at[bidx, write_idx].set(k[:, 0])
+        v_cache = cache["v"].at[bidx, write_idx].set(v[:, 0])
+    k_cache = shard(k_cache, ("batch", "kv_seq", None, None))
+    v_cache = shard(v_cache, ("batch", "kv_seq", None, None))
+
+    if cfg.window > 0:
+        # ring buffer: every slot valid once cur_index >= S
+        n_valid = jnp.minimum(cur + 1, S)[:, None, None, None]
+        out = _decode_ring(cfg, q, k_cache, v_cache, n_valid)
+    else:
+        out = decode_attention(cfg, q, k_cache, v_cache, cur + 1)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    y = linear_apply(cfg, p["wo"], out, out_logical=("batch", None, None))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def _decode_ring(cfg, q, k_cache, v_cache, n_valid):
+    """Window decode against a ring buffer: all slots < n_valid (broadcast
+    (B,1,1,1)) are valid and already within the window by construction."""
+    B, _, H, hd = q.shape
+    S, Kh = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Kh, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) * (hd ** -0.5)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    s = jnp.where(pos[None, None, None, :] < n_valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskh->bkgh", (p / l).astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,332 @@
+"""Shared LM building blocks: norms, embeddings, (quantized) linears, MLP, MoE.
+
+Everything is an explicit init/apply pair over plain-dict pytrees. Each init
+has a sibling ``*_specs`` returning the same-structured PartitionSpec tree
+(logical axes, resolved by parallel/sharding.py), which is what the dry-run
+uses for in_shardings.
+
+Quantization: the paper's technique is a first-class feature here.
+  * ``weight_bits >= 16``  -> bf16 baseline.
+  * QAT (training)         -> fake-quant on weights via core.quantizers (STE).
+  * serve path             -> real int8/int4 codes + per-channel scales
+                              (``quantize_params``), executed with an int8
+                              dot_general (MXU-native) — the TPU analogue of
+                              the paper's "narrowest width the hardware
+                              multiplies natively".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.quantizers import IntQuantizer
+from repro.parallel.sharding import batch_axes, model_axes, shard
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_vma=False)
+except (ImportError, TypeError):  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ArchConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((d,), _dtype(cfg)), "bias": jnp.zeros((d,), _dtype(cfg))}
+    return {"scale": jnp.ones((d,), _dtype(cfg))}
+
+
+def norm_specs(cfg: ArchConfig):
+    if cfg.norm == "ln":
+        return {"scale": P(), "bias": P()}
+    return {"scale": P()}
+
+
+def norm_apply(cfg: ArchConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# (quantized) linear
+# ---------------------------------------------------------------------------
+
+def linear_init(key, in_dim, out_shape, cfg: ArchConfig, bias: bool = False,
+                scale: Optional[float] = None):
+    """Weight (in_dim, *out_shape); trunc-normal init (1/sqrt(fan_in))."""
+    out_shape = out_shape if isinstance(out_shape, tuple) else (out_shape,)
+    std = scale if scale is not None else in_dim ** -0.5
+    w = (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, *out_shape), jnp.float32)
+         * std).astype(_dtype(cfg))
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros(out_shape, _dtype(cfg))
+    return p
+
+
+def linear_apply(cfg: ArchConfig, p, x, out_logical=None, fake_quant=True):
+    """y = x @ w (+b). Handles bf16 baseline, QAT fake-quant, and int8 serve.
+
+    The int8 serve path (p holds {"w_int", "w_scale"}) runs the MXU-native
+    int8 x int8 -> int32 dot, then one fused rescale — the streamlined
+    deployment form of the paper applied to LM matmuls.
+    """
+    if "w_int" in p:
+        w_int, w_scale = p["w_int"], p["w_scale"]
+        aq = IntQuantizer(bits=8, signed=True)
+        x_int, s_x = aq.quantize_int(x.astype(jnp.float32))
+        k = x.shape[-1]
+        acc = jax.lax.dot_general(
+            x_int, w_int,
+            (((x_int.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        y = acc.astype(jnp.float32) * (s_x * w_scale)
+        y = y.astype(_dtype(cfg))
+    else:
+        w = p["w"]
+        if fake_quant and cfg.weight_bits < 16:
+            wq = IntQuantizer(bits=cfg.weight_bits, signed=True, narrow=True)
+            w = wq(w.astype(jnp.float32)).astype(w.dtype)
+        y = jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        )
+    if "b" in p:
+        y = y + p["b"]
+    if out_logical is not None:
+        y = shard(y, out_logical)
+    return y
+
+
+def quantize_linear_params(p, bits: int = 8):
+    """Convert a float linear param dict to the int serve form (per-out-channel
+    scales over the fan-in axis)."""
+    w = jnp.asarray(p["w"], jnp.float32)
+    q = IntQuantizer(bits=bits, signed=True, narrow=True, axis=0)
+    flat = w.reshape(w.shape[0], -1)
+    w_int, s = q.quantize_int(flat)
+    out = {
+        "w_int": w_int.reshape(w.shape).astype(jnp.int8),
+        "w_scale": s.reshape((1,) * (w.ndim - len(s.shape) + 1) + s.shape[1:]).reshape(
+            (1,) + w.shape[1:]).astype(jnp.float32),
+    }
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ArchConfig):
+    e = (jax.random.normal(key, (cfg.vocab, cfg.d_model), jnp.float32)
+         * cfg.d_model ** -0.5).astype(_dtype(cfg))
+    return {"table": e}
+
+
+def embed_specs(cfg: ArchConfig):
+    return {"table": P(*_mx("vocab"), *_mx("fsdp"))}
+
+
+def _mx(logical):
+    """logical axis -> 1-tuple of (mesh axes or None) for P construction."""
+    from repro.parallel.sharding import active_rules
+
+    r = active_rules().get(logical)
+    if r is None:
+        return (None,)
+    return (r if not (isinstance(r, tuple) and len(r) == 1) else r[0],)
+
+
+def embed_apply(cfg: ArchConfig, p, tokens):
+    x = jnp.take(p["table"], tokens, axis=0)
+    return shard(x.astype(_dtype(cfg)), ("batch", None, None))
+
+
+def head_apply(cfg: ArchConfig, p, x):
+    logits = jax.lax.dot_general(
+        x, p["table"].T if "table" in p else p["w"],
+        (((x.ndim - 1,), (0,)), ((), ())),
+    )
+    return shard(logits.astype(jnp.float32), ("batch", None, "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": linear_init(k1, cfg.d_model, cfg.d_ff, cfg),
+        "wi_up": linear_init(k2, cfg.d_model, cfg.d_ff, cfg),
+        "wo": linear_init(k3, cfg.d_ff, cfg.d_model, cfg,
+                          scale=(2 * cfg.n_layers * cfg.d_ff) ** -0.5),
+    }
+
+
+def mlp_specs(cfg: ArchConfig):
+    in_spec = P(*_mx("fsdp"), *_mx("mlp"))
+    out_spec = P(*_mx("mlp"), *_mx("fsdp"))
+    return {"wi_gate": {"w": in_spec}, "wi_up": {"w": in_spec}, "wo": {"w": out_spec}}
+
+
+def mlp_apply(cfg: ArchConfig, p, x):
+    g = linear_apply(cfg, p["wi_gate"], x, out_logical=("batch", None, "mlp"))
+    u = linear_apply(cfg, p["wi_up"], x, out_logical=("batch", None, "mlp"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = linear_apply(cfg, p["wo"], h, out_logical=("batch", None, None))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, shard_map expert compute: DP tokens x TP expert d_ff)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ArchConfig):
+    E = cfg.moe_experts
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    dt = _dtype(cfg)
+    std_in = cfg.d_model ** -0.5
+    std_out = (2 * cfg.n_layers * cfg.d_ff) ** -0.5
+    p = {
+        "router": {"w": (jax.random.normal(k1, (cfg.d_model, E), jnp.float32)
+                         * std_in).astype(jnp.float32)},
+        "wi_gate": (jax.random.normal(k2, (E, cfg.d_model, cfg.d_ff), jnp.float32)
+                    * std_in).astype(dt),
+        "wi_up": (jax.random.normal(k3, (E, cfg.d_model, cfg.d_ff), jnp.float32)
+                  * std_in).astype(dt),
+        "wo": (jax.random.normal(k4, (E, cfg.d_ff, cfg.d_model), jnp.float32)
+               * std_out).astype(dt),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = mlp_init(k5, cfg)
+    return p
+
+
+def moe_specs(cfg: ArchConfig):
+    ein = P(*_mx("experts"), *_mx("fsdp"), *_mx("mlp"))
+    eout = P(*_mx("experts"), *_mx("mlp"), *_mx("fsdp"))
+    p = {"router": {"w": P()}, "wi_gate": ein, "wi_up": ein, "wo": eout}
+    if cfg.moe_shared_expert:
+        p["shared"] = mlp_specs(cfg)
+    return p
+
+
+def _expert_ffn(x_ecd, wg, wu, wo):
+    """x: (E, C, d); weights (E, d, f) / (E, f, d) -> (E, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", x_ecd, wg)
+    u = jnp.einsum("ecd,edf->ecf", x_ecd, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x_ecd.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _moe_local(x, idx, weights, wg, wu, wo, *, E, k, capacity_factor, axis_names):
+    """Per-data-shard dispatch -> TP expert FFN -> combine.
+
+    Runs inside shard_map: x (Bl, S, d) local tokens; weights on 'model' axis
+    hold a d_ff slice (f/M). FSDP gathering over 'data' happens in the caller
+    (backward of all_gather = reduce_scatter = correct FSDP grads).
+    """
+    Bl, S, d = x.shape
+    T = Bl * S
+    xf = x.reshape(T, d)
+    flat_e = idx.reshape(-1)                      # (T*k,)
+    flat_w = weights.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1  # pos in expert
+    C = max(int(T * k * capacity_factor / E), 1)
+    keep = pos < C
+    slot = flat_e * C + jnp.clip(pos, 0, C - 1)
+    slot = jnp.where(keep, slot, E * C)           # dropped -> OOB row
+    x_rep = jnp.repeat(xf, k, axis=0)             # token t repeated k times
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(x_rep)
+    buf = buf[: E * C].reshape(E, C, d)
+    h = _expert_ffn(buf, wg, wu, wo)              # (E, C, d) partial over f-slice
+    # combine BEFORE the TP reduce: gather+weight+sum are linear in h, so the
+    # psum moves to the (T, d) token buffer instead of the (E, C, d) capacity
+    # buffer — k*capacity_factor x fewer collective bytes (§Perf, confirmed)
+    flat_h = jnp.concatenate([h.reshape(E * C, d), jnp.zeros((1, d), h.dtype)], 0)
+    y = flat_h[slot] * (flat_w * keep.astype(jnp.float32))[:, None].astype(h.dtype)
+    y = y.reshape(T, k, d).sum(axis=1)
+    if axis_names:
+        y = jax.lax.psum(y, axis_names)           # TP reduce over 'model'
+    return y.reshape(Bl, S, d)
+
+
+def moe_apply(cfg: ArchConfig, p, x):
+    """Returns (y, aux_loss)."""
+    from repro.parallel.sharding import active_mesh
+
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    logits = (x.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (B, S, E)
+    weights, idx = jax.lax.top_k(probs, k)                  # (B, S, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2), axis=(0, 1)
+    ) / k
+    aux = E * jnp.sum(me * ce)
+
+    mesh = active_mesh()
+    if mesh is None:
+        y = _moe_local(x, idx, weights, p["wi_gate"], p["wi_up"], p["wo"],
+                       E=E, k=k, capacity_factor=cfg.capacity_factor, axis_names=())
+    else:
+        bspec = P(batch_axes() or None, None, None)
+        m_ax = model_axes()
+        fsdp = _mx("fsdp")[0]
+        ein = P(None, fsdp, m_ax or None)
+        eout = P(None, m_ax or None, fsdp)
+
+        def local_fn(xl, il, wl, wg, wu, wo):
+            if fsdp is not None:  # FSDP all-gather (bwd: reduce-scatter)
+                wg = jax.lax.all_gather(wg, fsdp, axis=1, tiled=True)
+                wu = jax.lax.all_gather(wu, fsdp, axis=1, tiled=True)
+                wo = jax.lax.all_gather(wo, fsdp, axis=2, tiled=True)
+            return _moe_local(xl, il, wl, wg, wu, wo, E=E, k=k,
+                              capacity_factor=cfg.capacity_factor,
+                              axis_names=m_ax)
+
+        y = shard_map(
+            local_fn, mesh,
+            in_specs=(bspec, bspec, bspec, ein, ein, eout),
+            out_specs=bspec,
+        )(x, idx, weights, p["wi_gate"], p["wi_up"], p["wo"])
+
+    if cfg.moe_shared_expert:
+        y = y + mlp_apply(cfg, p["shared"], x)
+    return y, aux

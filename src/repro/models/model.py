@@ -1,0 +1,193 @@
+"""Top-level model: init / forward / loss / prefill / decode for any ArchConfig.
+
+Entry points mirror the three lowering targets of the dry-run:
+  * ``train_logits`` / ``loss``      -> train_step
+  * ``prefill``                       -> prefill_32k cells
+  * ``decode_step``                   -> decode_32k / long_500k cells
+
+Input conventions (see launch/dryrun.input_specs):
+  * text archs:   tokens (B, S) int32
+  * vlm / audio:  embeds (B, S, d_model) (frontend stub) + labels;
+                  vlm additionally takes positions (3, B, S) for M-RoPE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    _dtype,
+    _mx,
+    embed_apply,
+    embed_init,
+    embed_specs,
+    norm_apply,
+    norm_init,
+    norm_specs,
+    quantize_linear_params,
+)
+from repro.parallel.sharding import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- params --------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        k_embed, k_stack, k_head = jax.random.split(key, 3)
+        p: Dict[str, Any] = {"blocks": tfm.stack_init(k_stack, self.cfg),
+                             "final_norm": norm_init(self.cfg)}
+        if self.cfg.embed_inputs:
+            p["embed"] = embed_init(k_embed, self.cfg)
+        if not self.cfg.tie_embeddings:
+            head = (jax.random.normal(k_head, (self.cfg.d_model, self.cfg.vocab),
+                                      jnp.float32) * self.cfg.d_model ** -0.5)
+            p["head"] = {"w": head.astype(_dtype(self.cfg))}
+        return p
+
+    def param_specs(self) -> Dict[str, Any]:
+        p: Dict[str, Any] = {"blocks": tfm.stack_specs(self.cfg),
+                             "final_norm": norm_specs(self.cfg)}
+        if self.cfg.embed_inputs:
+            p["embed"] = embed_specs(self.cfg)
+        if not self.cfg.tie_embeddings:
+            p["head"] = {"w": P(_mx("fsdp")[0], _mx("vocab")[0])}
+        return p
+
+    # -- forward ---------------------------------------------------------
+    def _inputs_to_h(self, params, batch):
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            h = embed_apply(cfg, params["embed"], batch["tokens"])
+            B, S = batch["tokens"].shape
+        else:
+            h = shard(batch["embeds"].astype(_dtype(cfg)), ("batch", None, None))
+            B, S = h.shape[:2]
+        if "positions" in batch:
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return h, positions
+
+    def _head(self, params, h):
+        cfg = self.cfg
+        h = norm_apply(cfg, params["final_norm"], h)
+        if not cfg.tie_embeddings and "w_int" in params["head"]:
+            from repro.models.layers import linear_apply
+
+            return linear_apply(cfg, params["head"], h,
+                                out_logical=("batch", None, "vocab")).astype(jnp.float32)
+        w = params["embed"]["table"].T if cfg.tie_embeddings else params["head"]["w"]
+        logits = jax.lax.dot_general(h, w, (((h.ndim - 1,), (0,)), ((), ())))
+        return shard(logits.astype(jnp.float32), ("batch", None, "vocab"))
+
+    def train_logits(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (logits (B,S,V) f32, aux_loss)."""
+        h, positions = self._inputs_to_h(params, batch)
+        h, aux = tfm.stack_apply(self.cfg, params["blocks"], h, positions)
+        return self._head(params, h), aux
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = self.train_logits(params, batch)
+        labels = batch["labels"]
+        V = self.cfg.vocab
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        lab = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = jnp.sum((lse - lab) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        # z-loss keeps the softmax normalizer bounded (MaxText-style)
+        zl = 1e-4 * jnp.sum(jnp.square(lse) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce + zl + 1e-2 * aux
+        return total, {"ce": ce, "z_loss": zl, "aux": aux}
+
+    # -- inference ---------------------------------------------------------
+    def prefill(self, params, batch) -> Tuple[jnp.ndarray, Any]:
+        """Full-sequence forward; returns (logits, caches filled up to S).
+
+        Caches are rebuilt from the per-layer K/V by a second pass would be
+        wasteful; instead attention runs normally and we return logits only —
+        serving uses ``prefill_with_cache`` for small models; the dry-run
+        lowers this full forward (the compute-dominant part of prefill).
+        """
+        h, positions = self._inputs_to_h(params, batch)
+        h, _ = tfm.stack_apply(self.cfg, params["blocks"], h, positions)
+        return self._head(params, h)
+
+    def cache_init(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        one = lambda: tfm.block_cache_init(cfg, batch, max_len, dtype)  # noqa: E731
+        if cfg.scan_layers:
+            caches = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_groups)]
+            ) if cfg.n_groups > 1 else jax.tree.map(lambda x: x[None], one())
+            return caches
+        return [one() for _ in range(cfg.n_groups)]
+
+    def cache_specs(self):
+        cfg = self.cfg
+        one = tfm.block_cache_specs(cfg)
+        if cfg.scan_layers:
+            return jax.tree.map(lambda s: P(None, *s), one,
+                                is_leaf=lambda x: isinstance(x, P))
+        return [one for _ in range(cfg.n_groups)]
+
+    def decode_step(self, params, caches, tokens_or_embeds, cur_index):
+        """One token for every sequence in the batch.
+
+        tokens (B, 1) int32 or embeds (B, 1, d). Returns (logits (B, 1, V),
+        new_caches).
+        """
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            h = embed_apply(cfg, params["embed"], tokens_or_embeds)
+        else:
+            h = shard(tokens_or_embeds.astype(_dtype(cfg)), ("batch", None, None))
+        h, new_caches = tfm.stack_decode(cfg, params["blocks"], caches, h, cur_index)
+        return self._head(params, h), new_caches
+
+    # -- deployment quantization (paper C1/C2 applied to the LM) -----------
+    def quantize_params(self, params, bits: int = 8):
+        """Convert every linear weight to int codes + scales (serve path).
+
+        Block params carry a leading stacked-groups axis when scan_layers is
+        on; quantization is vmapped over it so scales stay per-(layer, out-
+        channel). Norms, embeddings, and MoE expert tensors (bare arrays)
+        stay in bf16 — see DESIGN.md §Arch-applicability.
+        """
+
+        def qlin(p, stacked: bool):
+            fn = lambda q: quantize_linear_params(q, bits)  # noqa: E731
+            if stacked:
+                return jax.vmap(fn)({k: v for k, v in p.items()})
+            return fn(p)
+
+        def visit(p, stacked):
+            if isinstance(p, dict) and "w" in p and getattr(p["w"], "ndim", 0) >= (
+                3 if stacked else 2
+            ):
+                return qlin(p, stacked)
+            if isinstance(p, dict):
+                return {
+                    k: (v if k == "router" else visit(v, stacked))
+                    for k, v in p.items()
+                }
+            return p
+
+        out = {}
+        for k, v in params.items():
+            if k == "blocks":
+                out[k] = visit(v, self.cfg.scan_layers)
+            elif k == "head":
+                out[k] = visit(v, False)
+            else:
+                out[k] = v
+        return out

@@ -1,0 +1,222 @@
+"""Mamba-1 selective-state-space block with a TPU-friendly chunked scan.
+
+Hardware adaptation (DESIGN.md §2): GPU Mamba uses a fused CUDA selective-scan
+kernel that keeps h in registers. On TPU the analogous structure is a
+*chunked* scan: ``lax.scan`` over sequence chunks (sequential, O(T/c) steps)
+with an ``associative_scan`` inside each chunk (parallel, log(c) depth,
+VPU-friendly elementwise ops). This bounds the materialized state tensor to
+(B, c, d_inner, n_state) per chunk instead of the full (B, T, ...) — the same
+working-set discipline as the FPGA dataflow keeping activations on-chip.
+
+``selective_scan_ref`` is the naive per-step oracle used by tests.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dtype, _mx, linear_apply, linear_init
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(x, dt, B_t, C_t, A, D, h0=None):
+    """Naive sequential oracle.
+
+    x, dt: (B, T, di); B_t, C_t: (B, T, st); A: (di, st); D: (di,).
+    Returns (y (B, T, di), h_last (B, di, st)).
+    """
+    Bsz, T, di = x.shape
+    st = A.shape[1]
+    h = jnp.zeros((Bsz, di, st), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * A)                     # (B, di, st)
+        db = (dt_t * x_t)[..., None] * b_t[:, None, :]        # (B, di, st)
+        h = da * h + db
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B_t.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C_t.astype(jnp.float32), 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * D
+    return y.astype(x.dtype), h
+
+
+def _assoc_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def selective_scan_chunked(x, dt, B_t, C_t, A, D, chunk: int, h0=None):
+    """Chunked selective scan: lax.scan over chunks, associative scan inside.
+
+    Same signature/semantics as selective_scan_ref.
+    """
+    Bsz, T, di = x.shape
+    st = A.shape[1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, f"seq {T} not divisible by ssm chunk {chunk}"
+    nc = T // chunk
+
+    xf = x.astype(jnp.float32)
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)                  # (B,T,di,st)
+    b = (dt.astype(jnp.float32) * xf)[..., None] * B_t.astype(jnp.float32)[:, :, None, :]
+    a = jnp.moveaxis(a.reshape(Bsz, nc, chunk, di, st), 1, 0)           # (nc,B,c,di,st)
+    b = jnp.moveaxis(b.reshape(Bsz, nc, chunk, di, st), 1, 0)
+    c = jnp.moveaxis(
+        C_t.astype(jnp.float32).reshape(Bsz, nc, chunk, st), 1, 0
+    )                                                                    # (nc,B,c,st)
+
+    h_init = jnp.zeros((Bsz, di, st), jnp.float32) if h0 is None else h0
+
+    def chunk_step(h, inp):
+        a_c, b_c, c_c = inp                                  # (B,c,di,st), (B,c,st)
+        b_c = b_c.at[:, 0].add(a_c[:, 0] * h)
+        _, h_all = jax.lax.associative_scan(_assoc_combine, (a_c, b_c), axis=1)
+        y_c = jnp.einsum("bcds,bcs->bcd", h_all, c_c)
+        return h_all[:, -1], y_c
+
+    h_last, ys = jax.lax.scan(chunk_step, h_init, (a, b, c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T, di) + xf * D
+    return y.astype(x.dtype), h_last
+
+
+def selective_scan_step(x_t, dt_t, b_t, c_t, A, D, h):
+    """Single decode step. x_t/dt_t (B, di); b_t/c_t (B, st); h (B, di, st)."""
+    da = jnp.exp(dt_t.astype(jnp.float32)[..., None] * A)
+    db = (dt_t * x_t).astype(jnp.float32)[..., None] * b_t.astype(jnp.float32)[:, None, :]
+    h = da * h + db
+    y = jnp.einsum("bds,bs->bd", h, c_t.astype(jnp.float32)) + x_t.astype(jnp.float32) * D
+    return y.astype(x_t.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (K small: explicit shift-and-add)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b, state=None):
+    """x (B, T, di), w (K, di), b (di,). state (B, K-1, di) holds the last
+    K-1 inputs of the previous segment (decode). Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                  # (B, T+K-1, di)
+    y = sum(xp[:, j: j + x.shape[1]] * w[j] for j in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y + b, new_state
+
+
+# ---------------------------------------------------------------------------
+# mamba block
+# ---------------------------------------------------------------------------
+
+def ssm_init(key, cfg: ArchConfig):
+    d, di, st, dtr, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    keys = jax.random.split(key, 6)
+    dt_std = dtr ** -0.5
+    # dt bias: inverse-softplus of uniform[1e-3, 1e-1] (mamba init)
+    u = jax.random.uniform(keys[4], (di,), jnp.float32, 1e-3, 1e-1)
+    dt_bias = jnp.log(jnp.expm1(u))
+    return {
+        "in_proj": linear_init(keys[0], d, 2 * di, cfg),
+        "conv_w": (jax.random.normal(keys[1], (K, di), jnp.float32) * K ** -0.5
+                   ).astype(_dtype(cfg)),
+        "conv_b": jnp.zeros((di,), _dtype(cfg)),
+        "x_proj": linear_init(keys[2], di, dtr + 2 * st, cfg),
+        "dt_proj": {"w": (jax.random.normal(keys[3], (dtr, di), jnp.float32)
+                          * dt_std).astype(_dtype(cfg)),
+                    "b": dt_bias.astype(jnp.float32)},
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, st))).copy(),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": linear_init(keys[5], di, d, cfg,
+                                scale=(2 * cfg.n_layers * di) ** -0.5),
+    }
+
+
+def ssm_specs(cfg: ArchConfig):
+    fsdp, m = _mx("fsdp")[0], _mx("model")[0]
+    return {
+        "in_proj": {"w": P(fsdp, m)},
+        "conv_w": P(None, m),
+        "conv_b": P(m),
+        "x_proj": {"w": P(m, fsdp)},
+        "dt_proj": {"w": P(fsdp, m), "b": P(m)},
+        "A_log": P(m, None),
+        "D": P(m),
+        "out_proj": {"w": P(m, fsdp)},
+    }
+
+
+def ssm_apply(cfg: ArchConfig, p, x):
+    """Training / prefill forward. x (B, T, d) -> (B, T, d)."""
+    B, T, _ = x.shape
+    di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = linear_apply(cfg, p["in_proj"], x, out_logical=("batch", None, "model"))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, _ = causal_conv1d(xs, p["conv_w"], p["conv_b"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    xs = shard(xs, ("batch", None, "model"))
+
+    dbc = linear_apply(cfg, p["x_proj"], xs)
+    dt_r, B_t, C_t = jnp.split(dbc, [dtr, dtr + st], axis=-1)
+    # dt_proj through linear_apply so the int8 serve path (w_int) works too
+    dt_lin = linear_apply(cfg, {k: v for k, v in p["dt_proj"].items()
+                                if k != "b"}, dt_r)
+    dt = jax.nn.softplus(dt_lin.astype(jnp.float32) + p["dt_proj"]["b"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = selective_scan_chunked(xs, dt, B_t, C_t, A, p["D"], cfg.ssm_chunk)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return linear_apply(cfg, p["out_proj"], y, out_logical=("batch", None, None))
+
+
+def ssm_cache_init(cfg: ArchConfig, batch: int, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_cache_specs(cfg: ArchConfig):
+    b, m = _mx("batch")[0], _mx("model")[0]
+    return {"conv": P(b, None, m), "h": P(b, m, None)}
+
+
+def ssm_decode(cfg: ArchConfig, p, x, cache):
+    """One decode step. x (B, 1, d) -> (y (B, 1, d), new_cache)."""
+    B = x.shape[0]
+    di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = linear_apply(cfg, p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = causal_conv1d(xs, p["conv_w"], p["conv_b"], cache["conv"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+
+    dbc = linear_apply(cfg, p["x_proj"], xs)
+    dt_r, B_t, C_t = jnp.split(dbc, [dtr, dtr + st], axis=-1)
+    dt_lin = linear_apply(cfg, {k: v for k, v in p["dt_proj"].items()
+                                if k != "b"}, dt_r)
+    dt = jax.nn.softplus(dt_lin.astype(jnp.float32) + p["dt_proj"]["b"])
+    A = -jnp.exp(p["A_log"])
+    y, h = selective_scan_step(
+        xs[:, 0], dt[:, 0], B_t[:, 0], C_t[:, 0], A, p["D"], cache["h"]
+    )
+    y = y[:, None] * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = linear_apply(cfg, p["out_proj"], y, out_logical=("batch", None, None))
+    return y, {"conv": conv_state, "h": h}

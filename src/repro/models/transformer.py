@@ -1,0 +1,225 @@
+"""Block assembly + scan-over-layers for every assigned architecture family.
+
+A config's layers are grouped into ``n_groups`` identical *blocks* of
+``block_period`` sublayers (dense: 1; MoE-every-2: 2; jamba: 8 = 7 mamba +
+1 attention with alternating dense/MoE FFN). Blocks are homogeneous, so the
+whole stack is one ``lax.scan`` over stacked block params — constant HLO size
+in depth, which is what keeps 64-layer 314B-param dry-runs compilable.
+
+Remat policy per block is a config lever (cfg.remat: full | dots | none) and
+one of the §Perf hillclimbing knobs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (
+    mlp_apply,
+    mlp_init,
+    mlp_specs,
+    moe_apply,
+    moe_init,
+    moe_specs,
+    norm_apply,
+    norm_init,
+    norm_specs,
+)
+
+
+# ---------------------------------------------------------------------------
+# one block (= block_period sublayers)
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ArchConfig) -> Dict[str, Any]:
+    p: Dict[str, Any] = {}
+    keys = jax.random.split(key, cfg.block_period * 4)
+    for i in range(cfg.block_period):
+        k_mix, k_ff = keys[4 * i], keys[4 * i + 1]
+        sub: Dict[str, Any] = {"norm1": norm_init(cfg)}
+        if cfg.layer_kind(i) == "attn":
+            sub["attn"] = attn.attn_init(k_mix, cfg)
+        else:
+            sub["ssm"] = ssm.ssm_init(k_mix, cfg)
+        if cfg.d_ff > 0:
+            sub["norm2"] = norm_init(cfg)
+            if cfg.layer_is_moe(i):
+                sub["moe"] = moe_init(k_ff, cfg)
+            else:
+                sub["mlp"] = mlp_init(k_ff, cfg)
+        p[f"sub{i}"] = sub
+    return p
+
+
+def block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    p: Dict[str, Any] = {}
+    for i in range(cfg.block_period):
+        sub: Dict[str, Any] = {"norm1": norm_specs(cfg)}
+        if cfg.layer_kind(i) == "attn":
+            sub["attn"] = attn.attn_specs(cfg)
+        else:
+            sub["ssm"] = ssm.ssm_specs(cfg)
+        if cfg.d_ff > 0:
+            sub["norm2"] = norm_specs(cfg)
+            if cfg.layer_is_moe(i):
+                sub["moe"] = moe_specs(cfg)
+            else:
+                sub["mlp"] = mlp_specs(cfg)
+        p[f"sub{i}"] = sub
+    return p
+
+
+def block_apply(cfg: ArchConfig, p, x, positions):
+    """Forward through one block. Returns (x, aux_loss)."""
+    from repro.parallel.sharding import shard
+
+    # residual-stream constraint: logical "seq" is None in the baseline
+    # rules (replicated) and "model" under sequence parallelism — flipping
+    # that one rule re-shards every inter-layer activation (a §Perf lever).
+    x = shard(x, ("batch", "seq", None))
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(cfg.block_period):
+        sub = p[f"sub{i}"]
+        h = norm_apply(cfg, sub["norm1"], x)
+        if cfg.layer_kind(i) == "attn":
+            mixed = attn.attn_apply(cfg, sub["attn"], h, positions)
+        else:
+            mixed = ssm.ssm_apply(cfg, sub["ssm"], h)
+        x = x + mixed
+        if cfg.d_ff > 0:
+            h = norm_apply(cfg, sub["norm2"], x)
+            if cfg.layer_is_moe(i):
+                y, a = moe_apply(cfg, sub["moe"], h)
+                aux = aux + a
+            else:
+                y = mlp_apply(cfg, sub["mlp"], h)
+            x = x + y
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def block_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    c: Dict[str, Any] = {}
+    for i in range(cfg.block_period):
+        if cfg.layer_kind(i) == "attn":
+            c[f"sub{i}"] = attn.attn_cache_init(cfg, batch, max_len, dtype)
+        else:
+            c[f"sub{i}"] = ssm.ssm_cache_init(cfg, batch, dtype)
+    return c
+
+
+def block_cache_specs(cfg: ArchConfig):
+    c: Dict[str, Any] = {}
+    for i in range(cfg.block_period):
+        if cfg.layer_kind(i) == "attn":
+            c[f"sub{i}"] = attn.attn_cache_specs(cfg)
+        else:
+            c[f"sub{i}"] = ssm.ssm_cache_specs(cfg)
+    return c
+
+
+def block_decode(cfg: ArchConfig, p, x, cache, cur_index):
+    new_cache: Dict[str, Any] = {}
+    for i in range(cfg.block_period):
+        sub = p[f"sub{i}"]
+        h = norm_apply(cfg, sub["norm1"], x)
+        if cfg.layer_kind(i) == "attn":
+            mixed, new_cache[f"sub{i}"] = attn.attn_decode(
+                cfg, sub["attn"], h, cache[f"sub{i}"], cur_index
+            )
+        else:
+            mixed, new_cache[f"sub{i}"] = ssm.ssm_decode(
+                cfg, sub["ssm"], h, cache[f"sub{i}"]
+            )
+        x = x + mixed
+        if cfg.d_ff > 0:
+            h = norm_apply(cfg, sub["norm2"], x)
+            if cfg.layer_is_moe(i):
+                y, _ = moe_apply(cfg, sub["moe"], h)
+            else:
+                y = mlp_apply(cfg, sub["mlp"], h)
+            x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack (scan over groups)
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: ArchConfig):
+    keys = jax.random.split(key, cfg.n_groups)
+    if cfg.scan_layers:
+        return jax.vmap(lambda k: block_init(k, cfg))(keys)
+    return [block_init(k, cfg) for k in keys]
+
+
+def stack_specs(cfg: ArchConfig):
+    one = block_specs(cfg)
+    if not cfg.scan_layers:
+        return [one for _ in range(cfg.n_groups)]
+    # prepend the stacked "layers" axis (replicated) to every leaf spec
+    def add_axis(spec: P) -> P:
+        return P(None, *spec)
+
+    return jax.tree.map(add_axis, one, is_leaf=lambda x: isinstance(x, P))
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    if cfg.remat == "dots_saveable":
+        # save every matmul output, recompute elementwise/norm/softmax only —
+        # usually the transformer sweet spot between 'full' and 'none'
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def stack_apply(cfg: ArchConfig, stacked, x, positions):
+    """Forward through all groups. Returns (x, aux_loss)."""
+    if not cfg.scan_layers:
+        aux = jnp.zeros((), jnp.float32)
+        for p in stacked:
+            x, a = _remat(cfg, functools.partial(block_apply, cfg))(p, x, positions)
+            aux = aux + a
+        return x, aux
+
+    def body(carry, p):
+        x, aux = carry
+        x, a = block_apply(cfg, p, x, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(_remat(cfg, body), (x, jnp.zeros((), jnp.float32)),
+                               stacked)
+    return x, aux
+
+
+def stack_decode(cfg: ArchConfig, stacked, caches, x, cur_index):
+    """Decode step through all groups. Returns (x, new_caches)."""
+    if not cfg.scan_layers:
+        new = []
+        for p, c in zip(stacked, caches):
+            x, nc = block_decode(cfg, p, x, c, cur_index)
+            new.append(nc)
+        return x, new
+
+    def body(x, pc):
+        p, c = pc
+        x, nc = block_decode(cfg, p, x, c, cur_index)
+        return x, nc
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches))
+    return x, new_caches

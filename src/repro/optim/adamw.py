@@ -1,0 +1,109 @@
+"""AdamW + gradient clipping + cosine LR schedule, pure JAX pytree ops.
+
+Kept dependency-free (no optax in this container). The optimizer state
+(m, v in f32) is sharded like the parameters (same PartitionSpec tree), so
+FSDP covers optimizer memory too — at 314B params that is the difference
+between fitting and not fitting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: jnp.ndarray,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, jnp.maximum(cos, 0.1 * base_lr))
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    lr_fn: Callable
+    max_grad_norm: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    weight_decay: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        return adamw_init(params)
+
+    def update(self, grads, state, params):
+        grads, gn = clip_by_global_norm(grads, self.max_grad_norm)
+        lr = self.lr_fn(state.step + 1)
+        new_p, new_s = adamw_update(
+            grads, state, params, lr,
+            b1=self.b1, b2=self.b2, weight_decay=self.weight_decay,
+        )
+        return new_p, new_s, {"grad_norm": gn, "lr": lr}
+
+
+def make_optimizer(base_lr: float = 3e-4, warmup: int = 100, total: int = 10_000,
+                   max_grad_norm: float = 1.0, weight_decay: float = 0.1) -> Optimizer:
+    return Optimizer(lr_fn=cosine_schedule(base_lr, warmup, total),
+                     max_grad_norm=max_grad_norm, weight_decay=weight_decay)

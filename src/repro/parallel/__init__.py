@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    active_mesh,
+    logical_to_spec,
+    shard,
+    use_mesh_rules,
+)

@@ -1,0 +1,147 @@
+"""Logical-axis sharding rules for the production mesh.
+
+Mesh axes (launch/mesh.py):
+    single-pod : ("data", "model")                    16 x 16 = 256 chips
+    multi-pod  : ("pod", "data", "model")         2 x 16 x 16 = 512 chips
+
+Logical activation/parameter axes map onto mesh axes through LOGICAL_RULES —
+the MaxText pattern, so changing a sharding strategy is a one-line rule edit
+(and that is exactly what the §Perf hillclimbing iterates on).
+
+Default strategy (the "baseline" recorded in EXPERIMENTS.md):
+    batch        -> (pod, data)     pure DP across pods + data axis
+    vocab/heads/mlp/experts -> model   tensor parallelism
+    fsdp         -> data            parameter + optimizer-state FSDP
+    kv_seq       -> model           sequence-sharded KV cache for decode
+
+``shard(x, axes)`` applies a with_sharding_constraint when a mesh context is
+active and is the identity otherwise, so the same model code runs on a
+laptop CPU, in smoke tests, and on a 512-chip dry-run.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None, Tuple[str, ...]]
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+LOGICAL_RULES = {
+    "batch": ("pod", "data"),
+    "batch_nopod": ("data",),
+    "fsdp": ("data",),
+    "model": ("model",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "heads_flat": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": None,          # experts replicated; TP inside expert (baseline)
+    "kv_seq": ("model",),     # decode: sequence-sharded KV cache
+    "seq": None,              # activations: sequence replicated (baseline)
+    "embed": None,
+    "layers": None,           # scan/stack axis of layer params
+}
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict = dict(LOGICAL_RULES)
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh + logical rules for model code built inside the block."""
+    prev = (_STATE.mesh, _STATE.rules)
+    merged = dict(LOGICAL_RULES)
+    if rules:
+        merged.update(rules)
+    if mesh is not None:
+        # drop rules that reference axes the mesh doesn't have (e.g. "pod"
+        # on the single-pod mesh)
+        def _filter(v):
+            if v is None:
+                return None
+            axes = tuple(a for a in (v if isinstance(v, tuple) else (v,))
+                         if a in mesh.axis_names)
+            return axes or None
+
+        merged = {k: _filter(v) for k, v in merged.items()}
+    _STATE.mesh, _STATE.rules = mesh, merged
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def active_rules() -> dict:
+    return _STATE.rules
+
+
+def logical_to_spec(axes: Sequence[Optional[str]]) -> P:
+    """Map a tuple of logical axis names (or None) to a PartitionSpec."""
+    rules = _STATE.rules
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        else:
+            r = rules.get(a, None)
+            if r is None:
+                out.append(None)
+            elif isinstance(r, tuple) and len(r) == 1:
+                out.append(r[0])
+            else:
+                out.append(r)
+    return P(*out)
+
+
+def shard(x, axes: Sequence[Optional[str]]):
+    """with_sharding_constraint under the active mesh; identity otherwise."""
+    mesh = _STATE.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(axes: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+    mesh = _STATE.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(axes))
+
+
+def mesh_axis_size(name: str) -> int:
+    mesh = _STATE.mesh
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def batch_axes() -> Tuple[str, ...]:
+    """Concrete mesh axes the batch is sharded over (for shard_map specs)."""
+    r = _STATE.rules.get("batch")
+    if r is None:
+        return ()
+    return r if isinstance(r, tuple) else (r,)
+
+
+def model_axes() -> Tuple[str, ...]:
+    r = _STATE.rules.get("model")
+    if r is None:
+        return ()
+    return r if isinstance(r, tuple) else (r,)

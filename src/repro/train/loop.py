@@ -1,0 +1,137 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler watchdog,
+preemption safety, deterministic resume.
+
+Mechanisms (each unit-tested with injected faults in tests/test_train_loop.py):
+
+  * **auto-resume**: on start, the loop restores the latest checkpoint if one
+    exists; the data pipeline is a pure function of step, so resume is exact.
+  * **preemption / crash**: checkpoints are atomic (checkpoint/), so a kill
+    at any instant loses at most `ckpt_every` steps.
+  * **straggler watchdog**: per-step wall time is tracked against a running
+    median; `slow_factor`x outliers increment a straggler counter. After
+    `max_consecutive_slow` consecutive slow steps the loop checkpoints and
+    raises ``ElasticRestart`` — on a real pod the scheduler remaps the slice
+    (excluding the slow host) and relaunches; restore reshards onto the new
+    mesh (checkpoint.restore takes any target sharding).
+  * **fault hooks**: `step_hook(step)` lets tests inject latency or
+    exceptions at precise steps to exercise every path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.checkpoint.checkpoint import CheckpointManager, latest_step
+
+log = logging.getLogger("repro.train")
+
+
+class ElasticRestart(RuntimeError):
+    """Raised when the watchdog requests a mesh remap; the launcher catches
+    this, rebuilds the mesh from surviving devices, and calls run() again."""
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_n: int = 3
+    log_every: int = 10
+    slow_factor: float = 3.0
+    max_consecutive_slow: int = 5
+    watchdog_warmup: int = 10
+
+
+@dataclasses.dataclass
+class LoopResult:
+    final_step: int
+    metrics_history: List[Dict]
+    resumed_from: Optional[int]
+    straggler_events: int
+
+
+def run_training(
+    train_step: Callable,
+    init_state: Any,
+    batch_fn: Callable[[int], Any],
+    cfg: LoopConfig,
+    step_hook: Optional[Callable[[int], None]] = None,
+    time_fn: Callable[[], float] = time.monotonic,
+) -> LoopResult:
+    """Run (or resume) training until cfg.total_steps."""
+    mgr = CheckpointManager(cfg.ckpt_dir, every=cfg.ckpt_every, keep_n=cfg.keep_n)
+    state = init_state
+    start = 0
+    resumed_from = None
+    if latest_step(cfg.ckpt_dir) is not None:
+        state, start, manifest = mgr.restore_latest(init_state)
+        resumed_from = start
+        log.info("resumed from step %d", start)
+
+    history: List[Dict] = []
+    step_times: List[float] = []
+    consecutive_slow = 0
+    straggler_events = 0
+
+    step = start
+    try:
+        while step < cfg.total_steps:
+            t0 = time_fn()
+            if step_hook is not None:
+                step_hook(step)
+            batch = batch_fn(step)
+            state, metrics = train_step(state, batch)
+            # block so the watchdog measures real step time
+            jax.block_until_ready(jax.tree.leaves(metrics)[0])
+            dt = time_fn() - t0
+            step += 1
+            step_times.append(dt)
+
+            if step % cfg.log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"], m["step_time_s"] = step, dt
+                history.append(m)
+                log.info("step %d %s", step, m)
+
+            # ---- straggler watchdog -----------------------------------
+            if len(step_times) > cfg.watchdog_warmup:
+                med = statistics.median(step_times[-50:])
+                if dt > cfg.slow_factor * med:
+                    consecutive_slow += 1
+                    straggler_events += 1
+                    log.warning("slow step %d: %.3fs vs median %.3fs", step, dt, med)
+                else:
+                    consecutive_slow = 0
+                if consecutive_slow >= cfg.max_consecutive_slow:
+                    mgr.maybe_save(step, state, block=True, force=True)
+                    raise ElasticRestart(
+                        f"{consecutive_slow} consecutive straggler steps at {step}"
+                    )
+
+            mgr.maybe_save(step, state)
+    except ElasticRestart:
+        raise
+    except BaseException:
+        # crash path: best-effort synchronous checkpoint, then re-raise
+        try:
+            mgr.maybe_save(step, state, block=True, force=True)
+        except BaseException:  # pragma: no cover
+            pass
+        raise
+    finally:
+        mgr.wait()
+
+    mgr.maybe_save(step, state, block=True, force=True)
+    return LoopResult(
+        final_step=step,
+        metrics_history=history,
+        resumed_from=resumed_from,
+        straggler_events=straggler_events,
+    )

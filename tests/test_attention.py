@@ -1,0 +1,147 @@
+"""Attention-layer equivalences: chunked (flash-jnp) vs naive, decode vs
+full forward, M-RoPE, sliding window, ring-buffer decode."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn
+
+
+def _cfg(**kw):
+    cfg = get_config("llama3-8b").reduced()
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _qkv(cfg, B, S, key):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, cfg.n_heads, cfg.hd))
+    k = jax.random.normal(ks[1], (B, S, cfg.n_kv_heads, cfg.hd))
+    v = jax.random.normal(ks[2], (B, S, cfg.n_kv_heads, cfg.hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_chunked_equals_naive(chunk):
+    cfg = _cfg(attn_chunk=chunk)
+    B, S = 2, 64
+    q, k, v = _qkv(cfg, B, S, jax.random.PRNGKey(0))
+    pos = jnp.arange(S)
+    bias = attn.mask_bias(cfg, pos, pos)
+    out_naive = attn.naive_attention(q, k, v, bias)
+    out_chunk = attn.chunked_attention(cfg, q, k, v, pos, pos)
+    np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(out_naive),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_sliding_window_equals_naive():
+    cfg = _cfg(window=24, attn_chunk=16)
+    B, S = 1, 64
+    q, k, v = _qkv(cfg, B, S, jax.random.PRNGKey(1))
+    pos = jnp.arange(S)
+    bias = attn.mask_bias(cfg, pos, pos)
+    out_naive = attn.naive_attention(q, k, v, bias)
+    out_chunk = attn.chunked_attention(cfg, q, k, v, pos, pos)
+    np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(out_naive),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mask_bias_causal_and_window():
+    cfg = _cfg(window=4)
+    pos = jnp.arange(8)
+    bias = np.asarray(attn.mask_bias(cfg, pos, pos))
+    assert bias[0, 1] < -1e29                    # future masked
+    assert bias[7, 7] == 0.0
+    assert bias[7, 2] < -1e29                    # outside window
+    assert bias[7, 4] == 0.0                     # inside window
+
+
+def test_encoder_only_no_causal_mask():
+    cfg = _cfg(encoder_only=True, causal=True)
+    pos = jnp.arange(6)
+    bias = np.asarray(attn.mask_bias(cfg, pos, pos))
+    assert np.all(bias == 0.0)                   # hubert: bidirectional
+
+
+def test_mrope_sections_rotate_differently():
+    cfg = dataclasses.replace(get_config("qwen2-vl-2b").reduced())
+    B, S = 1, 8
+    # t/h/w positions differ -> different cos/sin than plain rope
+    p3 = jnp.stack([jnp.arange(S)[None] * m for m in (1, 2, 3)])  # (3,1,S)
+    cos3, sin3 = attn.positions_cos_sin(cfg, p3)
+    cos1, sin1 = attn.positions_cos_sin(
+        cfg, jnp.broadcast_to(jnp.arange(S)[None][None], (3, 1, S)))
+    assert cos3.shape == (B, S, cfg.hd // 2)
+    assert not np.allclose(np.asarray(cos3), np.asarray(cos1))
+
+
+def test_rope_preserves_norm():
+    cfg = _cfg()
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, cfg.n_heads, cfg.hd))
+    cos, sin = attn.rope_freqs(cfg, jnp.arange(16)[None])
+    y = attn.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+
+
+def test_attn_decode_matches_full_forward():
+    """Step-by-step attn_decode == attn_apply on the same token stream."""
+    cfg = _cfg()
+    B, T = 1, 8
+    p = attn.attn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    full = attn.attn_apply(cfg, p, x, pos)
+
+    cache = attn.attn_cache_init(cfg, B, T)
+    outs = []
+    for t in range(T):
+        y, cache = attn.attn_decode(cfg, p, x[:, t: t + 1], cache,
+                                    jnp.asarray(t, jnp.int32))
+        outs.append(y)
+    stepped = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_windowed_ring_buffer_decode_matches_full():
+    """SWA decode with a ring cache smaller than the stream reproduces the
+    windowed full forward (h2o-danube path)."""
+    cfg = _cfg(window=4)
+    B, T = 1, 12
+    p = attn.attn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    full = attn.attn_apply(cfg, p, x, pos)
+
+    cache = attn.attn_cache_init(cfg, B, max_len=T)   # sized to window=4
+    assert cache["k"].shape[1] == 4                   # ring buffer = window
+    outs = []
+    for t in range(T):
+        y, cache = attn.attn_decode(cfg, p, x[:, t: t + 1], cache,
+                                    jnp.asarray(t, jnp.int32))
+        outs.append(y)
+    stepped = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_per_slot_cur_index_vector_decode():
+    """Serving path: (B,) per-slot positions advance independently."""
+    cfg = _cfg()
+    B = 2
+    p = attn.attn_init(jax.random.PRNGKey(0), cfg)
+    cache = attn.attn_cache_init(cfg, B, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, cfg.d_model))
+    cur = jnp.asarray([0, 3], jnp.int32)
+    y, new_cache = attn.attn_decode(cfg, p, x, cache, cur)
+    assert y.shape == (B, 1, cfg.d_model)
+    # slot 0 wrote at 0, slot 1 wrote at 3
+    assert float(jnp.sum(jnp.abs(new_cache["k"][0, 0]))) > 0
+    assert float(jnp.sum(jnp.abs(new_cache["k"][1, 3]))) > 0
+    assert float(jnp.sum(jnp.abs(new_cache["k"][1, 0]))) == 0

@@ -1,0 +1,110 @@
+"""Compressed-gradient collectives: quantization error bounds, error-feedback
+accumulation, and (via a 1-device mesh) the shard_map path end-to-end.
+Multi-device behaviour is exercised in test_multidevice.py (subprocess with
+8 forced host devices)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.layers import shard_map
+from repro.parallel.collectives import (
+    collective_bytes_saved,
+    compressed_psum,
+    compressed_psum_tree,
+)
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+
+
+def _run_in_shardmap(fn, *args):
+    mesh = _mesh1()
+    return shard_map(fn, mesh,
+                     in_specs=tuple(P() for _ in args),
+                     out_specs=(P(), P()))(*args)
+
+
+def test_compressed_psum_error_bounded():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 0.01
+
+    def f(g):
+        return compressed_psum(g, ("data",), 1)
+
+    mean, err = _run_in_shardmap(f, g)
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(mean - g))) <= scale * 0.5 + 1e-9
+    # err is exactly the quantization residual
+    np.testing.assert_allclose(np.asarray(g - mean), np.asarray(err), atol=1e-7)
+
+
+def test_error_feedback_recovers_lost_mass():
+    """Repeatedly sending the same gradient with EF converges the *cumulative*
+    update to the true cumulative gradient (1-bit-Adam property)."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (128,)) * 1e-3
+    err = jnp.zeros_like(g)
+    total_sent = jnp.zeros_like(g)
+    mesh = _mesh1()
+
+    def f(gi, e):
+        return compressed_psum_tree({"g": gi}, {"g": e}, ("data",), 1)
+
+    fn = shard_map(f, mesh, in_specs=(P(), P()),
+                   out_specs=({"g": P()}, {"g": P()}))
+    for _ in range(20):
+        out, new_err = fn(g, err)
+        total_sent = total_sent + out["g"]
+        err = new_err["g"]
+    # telescoping: total_sent = 20*g - err_final, |err_final| <= half a step
+    step = float(jnp.max(jnp.abs(g))) / 127.0
+    np.testing.assert_allclose(np.asarray(total_sent), np.asarray(20 * g),
+                               atol=step + 1e-7)
+
+
+def test_compressed_psum_tree_structure():
+    tree = {"a": jnp.ones((4,)), "b": {"c": jnp.ones((2, 2))}}
+    err = jax.tree.map(jnp.zeros_like, tree)
+    mesh = _mesh1()
+    fn = shard_map(
+        lambda t, e: compressed_psum_tree(t, e, ("data",), 1), mesh,
+        in_specs=(jax.tree.map(lambda _: P(), tree),
+                  jax.tree.map(lambda _: P(), err)),
+        out_specs=(jax.tree.map(lambda _: P(), tree),
+                   jax.tree.map(lambda _: P(), err)))
+    mean, new_err = fn(tree, err)
+    assert jax.tree.structure(mean) == jax.tree.structure(tree)
+    np.testing.assert_allclose(np.asarray(mean["a"]), 1.0, rtol=0.02)
+
+
+def test_bytes_saved_accounting():
+    g = {"w": jnp.zeros((1000,)), "b": jnp.zeros((24,))}
+    assert collective_bytes_saved(g) == 1024 * 3        # f32 -> int8
+
+
+def test_ddp_compressed_step_trains():
+    """Full explicit-DP step on a 1-device mesh: loss decreases."""
+    from repro.optim.adamw import make_optimizer
+    from repro.train.steps import init_ddp_state, make_ddp_compressed_step
+
+    w_true = jnp.asarray([2.0, -1.0, 0.5])
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    opt = make_optimizer(base_lr=0.05, warmup=1, total=100, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = init_ddp_state(params, opt)
+    step = make_ddp_compressed_step(loss_fn, opt, _mesh1())
+
+    rng = np.random.default_rng(0)
+    losses = []
+    for i in range(60):
+        x = jnp.asarray(rng.standard_normal((16, 3)), jnp.float32)
+        batch = {"x": x, "y": x @ w_true}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.05 * losses[0]

@@ -1,0 +1,94 @@
+"""FIFO-depth optimization (paper §3.1.2): discrete-event pipeline simulation
+and the shrink-to-max+1 pass."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import (
+    BIG_DEPTH,
+    Stage,
+    conv_pipeline_stages,
+    mlp_pipeline_stages,
+    optimize_fifo_depths,
+    prefetch_depth,
+    simulate_pipeline,
+)
+
+
+def test_single_stage_throughput():
+    stages = [Stage("s0", ii=1, latency=1, elems_in=1, elems_out=1)]
+    cycles, occ = simulate_pipeline(stages, 100, [BIG_DEPTH, BIG_DEPTH])
+    assert cycles <= 110          # ~1 token/cycle + pipeline fill
+    assert occ[0] <= 2            # never queues up with matched rates
+
+
+def test_rate_mismatch_accumulates_in_fifo():
+    """A slow consumer (ii=4) behind a fast producer backs tokens up."""
+    stages = [
+        Stage("fast", ii=1, latency=1),
+        Stage("slow", ii=4, latency=4),
+    ]
+    cycles, occ = simulate_pipeline(stages, 64, [BIG_DEPTH] * 3)
+    assert occ[1] > 10            # inter-stage FIFO filled substantially
+
+
+def test_optimize_preserves_throughput():
+    stages = mlp_pipeline_stages([128, 72, 72, 8, 72, 72, 128], reuse_factor=4)
+    res = optimize_fifo_depths(stages, n_tokens=128 * 4)
+    assert res["throughput_preserved"]
+    assert res["optimized_cycles"] <= res["baseline_cycles"]
+    assert res["total_buffer_elems"] < BIG_DEPTH
+
+
+def test_optimized_depths_are_max_occupancy_plus_one():
+    stages = [Stage("a", ii=1, latency=2), Stage("b", ii=3, latency=3)]
+    _, occ = simulate_pipeline(stages, 32, [BIG_DEPTH] * 3)
+    res = optimize_fifo_depths(stages, 32)
+    assert res["optimized_depths"] == [m + 1 for m in occ]
+
+
+def test_reuse_factor_raises_latency():
+    """Paper §3.3.2: higher RF = fewer parallel multipliers = longer latency."""
+    t1 = optimize_fifo_depths(mlp_pipeline_stages([64, 32, 8], 1), 64)
+    t8 = optimize_fifo_depths(mlp_pipeline_stages([64, 32, 8], 8), 64)
+    assert t8["optimized_cycles"] > t1["optimized_cycles"]
+
+
+def test_rate_conversion_elems():
+    """A 4->1 downsampler stage consumes 4 tokens per output."""
+    stages = [Stage("down", ii=1, latency=1, elems_in=4, elems_out=1)]
+    cycles, _ = simulate_pipeline(stages, 64, [BIG_DEPTH, BIG_DEPTH])
+    assert cycles >= 64           # bounded by input feed rate
+
+
+def test_conv_pipeline_builder():
+    stages = conv_pipeline_stages([(9, 3, 1, 2), (3, 1, 2, 4)])
+    assert len(stages) == 2 and stages[1].ii == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(1, 4), st.integers(1, 6)), min_size=1,
+             max_size=4),
+    st.integers(8, 64),
+)
+def test_property_shrunk_fifos_never_regress(stage_params, n_tokens):
+    """Property (the paper's claim): depth = max_occupancy + 1 loses zero
+    throughput vs unbounded FIFOs, for any linear pipeline."""
+    stages = [Stage(f"s{i}", ii=ii, latency=lat)
+              for i, (ii, lat) in enumerate(stage_params)]
+    res = optimize_fifo_depths(stages, n_tokens)
+    assert res["optimized_cycles"] <= res["baseline_cycles"]
+
+
+def test_prefetch_depth_scales_with_rate_ratio():
+    assert prefetch_depth(0.001, 0.01) == 3        # fast producer: small buffer
+    assert prefetch_depth(0.02, 0.01) >= 4         # slow producer: deeper buffer
+
+
+def test_deadlock_detection():
+    """A stage needing more input tokens than its FIFO can hold deadlocks;
+    the simulator must detect it rather than spin forever."""
+    stages = [Stage("s", ii=1, latency=1, elems_in=20, elems_out=1)]
+    with pytest.raises(RuntimeError):
+        simulate_pipeline(stages, 30, [5, 5], max_cycles=10_000)

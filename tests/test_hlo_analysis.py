@@ -1,0 +1,125 @@
+"""HLO static analysis validation on known graphs: scan x N scales FLOPs by
+exactly N, collective bytes match array sizes, dot FLOPs = 2*M*N*K."""
+
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, shape_bytes
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    M, K, N = 8, 16, 4
+
+    def f(a, b):
+        return a @ b
+
+    hlo = _compiled_text(f, jnp.ones((M, K)), jnp.ones((K, N)))
+    stats = analyze_hlo(hlo)
+    assert stats.flops == pytest.approx(2 * M * N * K)
+
+
+def test_scan_scales_flops_by_trip_count():
+    M = 8
+    n_steps = 7
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+
+        y, _ = jax.lax.scan(body, x, None, length=n_steps)
+        return y
+
+    hlo = _compiled_text(f, jnp.ones((M, M)), jnp.ones((M, M)))
+    stats = analyze_hlo(hlo)
+    assert stats.flops == pytest.approx(n_steps * 2 * M * M * M)
+
+
+def test_nested_scan():
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            y, _ = jax.lax.scan(inner, c, None, length=3)
+            return y, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    hlo = _compiled_text(f, jnp.ones((4, 4)), jnp.ones((4, 4)))
+    stats = analyze_hlo(hlo)
+    assert stats.flops == pytest.approx(15 * 2 * 4 ** 3)
+
+
+def test_shape_bytes_parser():
+    assert shape_bytes("f32[8,4]") == 128
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("s8[3,3]") == 9
+    assert shape_bytes("(f32[4], s32[2])") == 24
+    assert shape_bytes("pred[16]") == 16
+
+
+def test_zero_collectives_on_single_device_graph():
+    hlo = _compiled_text(lambda x: x * 2, jnp.ones((4,)))
+    stats = analyze_hlo(hlo)
+    assert stats.collective_bytes == 0.0
+
+
+def test_flops_counted_inside_remat():
+    """jax.checkpoint re-runs the forward in the backward; the analysis must
+    see the duplicated dots (that is what the 6ND/HLO ratio catches)."""
+    w = jnp.ones((8, 8))
+
+    def loss_plain(x, w):
+        return jnp.sum(x @ w)
+
+    def loss_remat(x, w):
+        return jnp.sum(jax.checkpoint(lambda x: x @ w)(x))
+
+    x = jnp.ones((8, 8))
+    hlo_p = _compiled_text(jax.grad(loss_plain), x, w)
+    hlo_r = _compiled_text(jax.grad(loss_remat), x, w)
+    f_p = analyze_hlo(hlo_p).flops
+    f_r = analyze_hlo(hlo_r).flops
+    assert f_r >= f_p
+
+
+def test_conv_flops_positive():
+    def f(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    hlo = _compiled_text(f, jnp.ones((1, 8, 8, 3)), jnp.ones((3, 3, 3, 4)))
+    stats = analyze_hlo(hlo)
+    # 2 * out_positions * k*k*cin = 2 * (8*8*4) * 9 * 3
+    assert stats.flops == pytest.approx(2 * 64 * 4 * 9 * 3, rel=0.05)
+
+
+def test_collective_bytes_on_forced_multidevice_hlo():
+    """Hand-written HLO with an all-reduce: bytes must equal the array size."""
+    hlo = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[128,4]) -> f32[128,4] {
+  %x = f32[128,4] parameter(0)
+  ROOT %ar = f32[128,4] all-reduce(%x), to_apply=%add
+}
+"""
+    stats = analyze_hlo(hlo)
+    assert stats.collective_bytes == 128 * 4 * 4
+    assert stats.by_type == {"all-reduce": 128 * 4 * 4}
+    assert stats.by_count == {"all-reduce": 1}

@@ -1,0 +1,209 @@
+"""Multi-device integration tests, run in a subprocess with 8 forced host
+devices (XLA_FLAGS must be set before jax initializes, so these cannot run
+in-process — conftest deliberately does NOT set the flag globally)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(body: str, n_dev: int = 8, timeout: int = 420):
+    src = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        assert jax.device_count() == {n_dev}
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", src], env=env, timeout=timeout,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_spmd_train_step_8dev_matches_1dev():
+    """The pjit train step on a 4x2 mesh produces the same loss trajectory as
+    the single-device run — SPMD correctness of the whole stack."""
+    _run("""
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.optim.adamw import make_optimizer
+        from repro.train.steps import TrainState, make_train_step
+        from repro.parallel.sharding import use_mesh_rules
+        from repro.data.synthetic import SyntheticTokens
+
+        cfg = get_config("llama3-8b").reduced()
+        model = Model(cfg)
+        opt = make_optimizer(base_lr=1e-3, warmup=1, total=10)
+        data = SyntheticTokens(vocab=cfg.vocab, seq_len=16)
+        def batch(step):
+            b = data.batch(step, 8)
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+        # single-device reference
+        params = model.init(jax.random.PRNGKey(0))
+        state = TrainState(params=params, opt=opt.init(params))
+        step1 = jax.jit(make_train_step(model, opt))
+        losses_1dev = []
+        s = state
+        for t in range(3):
+            s, m = step1(s, batch(t))
+            losses_1dev.append(float(m["loss"]))
+
+        # 4x2 mesh SPMD
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+        with use_mesh_rules(mesh):
+            model2 = Model(cfg)
+            params2 = model2.init(jax.random.PRNGKey(0))
+            state2 = TrainState(params=params2, opt=opt.init(params2))
+            step8 = jax.jit(make_train_step(model2, opt))
+            with mesh:
+                losses_8dev = []
+                s2 = state2
+                for t in range(3):
+                    s2, m2 = step8(s2, batch(t))
+                    losses_8dev.append(float(m2["loss"]))
+
+        np.testing.assert_allclose(losses_8dev, losses_1dev, rtol=2e-3)
+        print("OK", losses_1dev, losses_8dev)
+    """)
+
+
+def test_moe_shardmap_8dev_matches_local():
+    """shard_map MoE (EP/TP path) == single-device _moe_local result."""
+    _run("""
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models.layers import moe_init, moe_apply
+        from repro.parallel.sharding import use_mesh_rules
+
+        cfg = dataclasses.replace(get_config("grok-1-314b").reduced(),
+                                  capacity_factor=8.0)
+        p = moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, cfg.d_model))
+
+        y_local, aux_local = moe_apply(cfg, p, x)
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+        with use_mesh_rules(mesh), mesh:
+            y_mesh, aux_mesh = jax.jit(lambda p, x: moe_apply(cfg, p, x))(p, x)
+
+        np.testing.assert_allclose(np.asarray(y_mesh), np.asarray(y_local),
+                                   rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(float(aux_mesh), float(aux_local), rtol=1e-3)
+        print("OK moe")
+    """)
+
+
+def test_compressed_allreduce_8dev():
+    """int8-compressed gradient all-reduce across 8 real (host) devices:
+    mean of per-shard gradients within quantization tolerance, EF captures
+    the residual."""
+    _run("""
+        from repro.parallel.collectives import compressed_psum
+        from repro.models.layers import shard_map
+
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+        g = jax.random.normal(jax.random.PRNGKey(0), (8, 512)) * 0.01
+
+        def f(gl):
+            gl = gl[0]
+            mean, err = compressed_psum(gl, ("data",), 8)
+            return mean[None], err[None]
+
+        mean, err = shard_map(f, mesh, in_specs=(P("data"),),
+                              out_specs=(P("data"), P("data")))(g)
+        true_mean = jnp.mean(g, axis=0)
+        scale = float(jnp.max(jnp.abs(g))) / 127.0
+        # each shard's quantization error <= scale/2; mean error likewise
+        err_bound = scale * 0.5 + 1e-9
+        assert float(jnp.max(jnp.abs(mean[0] - true_mean))) <= err_bound
+        print("OK compressed allreduce")
+    """)
+
+
+def test_elastic_mesh_shrink_and_restore():
+    """Simulated node failure: train on 8 devices, checkpoint, rebuild a
+    6-device mesh from 'surviving' devices, restore, keep training."""
+    _run("""
+        import tempfile
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.optim.adamw import make_optimizer
+        from repro.train.steps import TrainState, make_train_step
+        from repro.parallel.sharding import use_mesh_rules
+        from repro.checkpoint.checkpoint import save, restore
+        from repro.launch.mesh import make_elastic_mesh
+        from repro.data.synthetic import SyntheticTokens
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        model = Model(cfg)
+        opt = make_optimizer(base_lr=1e-3, warmup=1, total=10)
+        data = SyntheticTokens(vocab=cfg.vocab, seq_len=8)
+        def batch(step, B):
+            b = data.batch(step, B)
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+        mesh8 = make_elastic_mesh(model_parallel=2)
+        assert dict(mesh8.shape) == {"data": 4, "model": 2}
+        with use_mesh_rules(mesh8), mesh8:
+            params = model.init(jax.random.PRNGKey(0))
+            state = TrainState(params=params, opt=opt.init(params))
+            step = jax.jit(make_train_step(model, opt))
+            state, m = step(state, batch(0, 8))
+
+        d = tempfile.mkdtemp()
+        save(d, 1, state)
+
+        # "lose" two devices -> 6 survive -> 3x2 mesh
+        mesh6 = make_elastic_mesh(model_parallel=2, devices=jax.devices()[:6])
+        assert dict(mesh6.shape) == {"data": 3, "model": 2}
+        with use_mesh_rules(mesh6), mesh6:
+            restored, step_n, _ = restore(d, state)
+            state2 = jax.device_put(restored)  # reshard onto new topology
+            step2 = jax.jit(make_train_step(model, opt))
+            state2, m2 = step2(state2, batch(1, 6))
+            assert np.isfinite(float(m2["loss"]))
+        print("OK elastic", float(m["loss"]), float(m2["loss"]))
+    """)
+
+
+def test_dryrun_cell_inprocess_minimesh():
+    """A miniature dry-run (4x2 mesh) exercises the full lower+compile path
+    with the real input_specs/arch_rules machinery."""
+    _run("""
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.parallel.sharding import use_mesh_rules, logical_to_spec
+        from repro.launch.dryrun import input_specs, arch_rules, batch_shardings
+        from repro.configs.base import SHAPES
+        import dataclasses
+
+        cfg = get_config("llama3-8b").reduced()
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+        rules = arch_rules(cfg, mesh, ("data",))
+        with use_mesh_rules(mesh, rules):
+            model = Model(cfg)
+            pspecs = model.param_specs()
+            params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+            bsh = {k: v for k, v in batch_shardings(
+                cfg, shape, mesh, ("data",)).items() if k != "labels"}
+            bs = input_specs(cfg, shape)
+            lowered = jax.jit(model.prefill, in_shardings=(psh, bsh)).lower(
+                params_sds, {k: v for k, v in bs.items() if k != "labels"})
+            compiled = lowered.compile()
+            assert compiled.cost_analysis() is not None
+        print("OK minimesh dryrun")
+    """)

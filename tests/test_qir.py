@@ -1,0 +1,89 @@
+"""QIR (QONNX-analogue) interchange: JSON roundtrip, reference interpreter
+parity with the training-side forward, constant folding (paper C8 / §3.5)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.qir import Graph, Node, QuantSpec, export_qmlp
+from repro.core.qlayers import QDense, QDenseBatchNorm
+from repro.core.streamline import constant_fold
+
+
+def _tiny_mlp(key):
+    defs = [QDenseBatchNorm(6, 5, weight_bits=4, act_bits=4),
+            QDenseBatchNorm(5, 4, weight_bits=4, act_bits=4)]
+    params = [d.init(k) for d, k in zip(defs, jax.random.split(key, 2))]
+    head = QDense(4, 3, weight_bits=32, act_bits=32)
+    head_p = head.init(jax.random.fold_in(key, 7))
+    return defs, params, head_p
+
+
+def test_roundtrip_preserves_graph():
+    defs, params, head_p = _tiny_mlp(jax.random.PRNGKey(0))
+    g = export_qmlp(defs, params, head_p, meta={"task": "kws"})
+    g2 = Graph.from_json(g.to_json())
+    assert [n.op for n in g2.nodes] == [n.op for n in g.nodes]
+    assert g2.meta == {"task": "kws"}
+    for k, v in g.initializers.items():
+        np.testing.assert_array_equal(g2.initializers[k], v)
+
+
+def test_save_load(tmp_path):
+    defs, params, head_p = _tiny_mlp(jax.random.PRNGKey(1))
+    g = export_qmlp(defs, params, head_p)
+    p = tmp_path / "model.qir.json"
+    g.save(str(p))
+    g2 = Graph.load(str(p))
+    assert len(g2.nodes) == len(g.nodes)
+
+
+def test_interpreter_matches_eval_forward():
+    """Graph.run == the qlayers eval-mode forward it was exported from —
+    the property QONNX needs so hls4ml/FINN deploy what Brevitas trained."""
+    defs, params, head_p = _tiny_mlp(jax.random.PRNGKey(2))
+    g = export_qmlp(defs, params, head_p)
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (4, 6)))
+    out = g.run({"x": x})["logits"]
+
+    h = jnp.asarray(x)
+    for d, p in zip(defs, params):
+        h, _ = d.apply(p, h, train=False)
+    ref = h @ head_p["w"] + head_p["b"]
+    # The exported graph applies BN then ReLU then Quant separately; the
+    # layer's eval path folds BN into the (quantized) kernel. These agree to
+    # quantization tolerance, not exactly:
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=0.35, atol=0.35)
+    # class decisions should broadly agree
+    agree = (np.argmax(out, -1) == np.asarray(jnp.argmax(ref, -1))).mean()
+    assert agree >= 0.5
+
+
+def test_interpreter_ops():
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.initializers["w"] = np.eye(3, dtype=np.float32) * 2
+    g.nodes.append(Node("Dense", "d", ["x", "w"], ["h"]))
+    g.nodes.append(Node("Relu", "r", ["h"], ["y"]))
+    out = g.run({"x": np.asarray([[-1.0, 0.5, 2.0]], np.float32)})["y"]
+    np.testing.assert_array_equal(out, [[0.0, 1.0, 4.0]])
+
+
+def test_topk_node():
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.nodes.append(Node("TopK", "t", ["x"], ["y"]))
+    out = g.run({"x": np.asarray([[0.1, 0.9, 0.3]])})["y"]
+    assert int(out[0]) == 1
+
+
+def test_constant_folding_precomputes_quant_of_initializers():
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.initializers["w"] = np.linspace(-1, 1, 12).reshape(3, 4).astype(np.float32)
+    g.nodes.append(Node("Quant", "qw", ["w"], ["wq"], attrs={"bits": 4},
+                        quant=QuantSpec(bits=4)))
+    g.nodes.append(Node("Dense", "d", ["x", "wq"], ["y"]))
+    n_before = len(g.nodes)
+    g = constant_fold(g)
+    assert len(g.nodes) == n_before - 1           # Quant node removed
+    assert "wq" in g.initializers                  # precomputed at compile time
+    out = g.run({"x": np.ones((1, 3), np.float32)})["y"]
+    assert out.shape == (1, 4)

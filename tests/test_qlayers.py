@@ -1,0 +1,131 @@
+"""QDense / QConv2D / QDenseBatchNorm: the paper's Eqs. 3-4 BN folding and
+merged-ReLU behaviour."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.qlayers import QConv2D, QDense, QDenseBatchNorm
+
+
+def test_qdense_shapes_and_relu():
+    layer = QDense(16, 8, weight_bits=8, act_bits=8, relu=True)
+    p = layer.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    y = layer.apply(p, x)
+    assert y.shape == (4, 8)
+    assert float(jnp.min(y)) >= 0.0            # merged ReLU
+
+
+def test_qdense_full_precision_is_plain_matmul():
+    layer = QDense(8, 4, weight_bits=32, act_bits=32)
+    p = layer.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 8))
+    np.testing.assert_allclose(
+        np.asarray(layer.apply(p, x)), np.asarray(x @ p["w"] + p["b"]), rtol=1e-6)
+
+
+def test_qdense_param_count():
+    assert QDense(490, 256).n_params() == 490 * 256 + 256
+    assert QDense(490, 256, use_bias=False).n_params() == 490 * 256
+
+
+# ---------------------------------------------------------------------------
+# QDenseBatchNorm — paper Eqs. 3-4
+# ---------------------------------------------------------------------------
+
+def test_bn_fold_equations_match_unfused():
+    """Eval-mode folded layer == Dense -> BN computed separately (Eqs. 3-4)."""
+    layer = QDenseBatchNorm(12, 6, weight_bits=32, act_bits=32, relu=False)
+    p = layer.init(jax.random.PRNGKey(0))
+    # give BN non-trivial running stats
+    p = dict(p,
+             mu=jax.random.normal(jax.random.PRNGKey(2), (6,)),
+             sigma2=jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3), (6,))) + 0.5,
+             gamma=jax.random.normal(jax.random.PRNGKey(4), (6,)) + 1.0,
+             beta=jax.random.normal(jax.random.PRNGKey(5), (6,)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 12))
+
+    y_folded, _ = layer.apply(p, x, train=False)
+    # unfused reference
+    y_fc = x @ p["w"] + p["b"]
+    y_bn = (p["gamma"] * (y_fc - p["mu"]) / jnp.sqrt(p["sigma2"] + layer.eps)
+            + p["beta"])
+    np.testing.assert_allclose(np.asarray(y_folded), np.asarray(y_bn),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bn_fold_kernel_formula():
+    """fold() returns exactly k_folded = v*k, b_folded = v*(b-mu)+beta."""
+    layer = QDenseBatchNorm(4, 3, relu=False)
+    p = layer.init(jax.random.PRNGKey(0))
+    p = dict(p, mu=jnp.asarray([1.0, -1.0, 0.5]),
+             sigma2=jnp.asarray([4.0, 1.0, 0.25]),
+             gamma=jnp.asarray([2.0, 3.0, 1.0]),
+             beta=jnp.asarray([0.1, 0.2, 0.3]))
+    k_folded, b_folded = layer.fold(p)
+    v = np.asarray(p["gamma"]) / np.sqrt(np.asarray(p["sigma2"]) + layer.eps)
+    np.testing.assert_allclose(np.asarray(k_folded), np.asarray(p["w"]) * v[None, :],
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(b_folded),
+        v * (np.asarray(p["b"]) - np.asarray(p["mu"])) + np.asarray(p["beta"]),
+        rtol=1e-6)
+
+
+def test_bn_running_stats_update_in_train():
+    layer = QDenseBatchNorm(8, 4, momentum=0.5)
+    p = layer.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 8)) * 3 + 1
+    _, p1 = layer.apply(p, x, train=True)
+    assert not np.allclose(np.asarray(p1["mu"]), 0.0)          # moved toward batch mean
+    _, p2 = layer.apply(p1, x, train=False)
+    np.testing.assert_array_equal(np.asarray(p2["mu"]), np.asarray(p1["mu"]))
+
+
+def test_bn_train_uses_batch_stats_like_deployed_arithmetic():
+    """Train-mode forward quantizes the *folded* kernel — outputs stay on the
+    act-quant grid, matching the deployed integer layer."""
+    layer = QDenseBatchNorm(8, 4, weight_bits=4, act_bits=4)
+    p = layer.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    y, _ = layer.apply(p, x, train=True)
+    assert len(np.unique(np.asarray(y))) <= 2 ** 4 * 4  # coarse grid per channel
+
+
+# ---------------------------------------------------------------------------
+# QConv2D
+# ---------------------------------------------------------------------------
+
+def test_qconv_shapes():
+    conv = QConv2D(3, 8, kernel=3, stride=2, relu=True)
+    p = conv.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    y = conv.apply(p, x)
+    assert y.shape == (2, 8, 8, 8)
+    assert float(jnp.min(y)) >= 0.0
+
+
+def test_qconv_quantization_error_bounded():
+    conv_q = QConv2D(3, 4, kernel=3, weight_bits=8, act_bits=32, relu=False)
+    conv_f = QConv2D(3, 4, kernel=3, weight_bits=32, act_bits=32, relu=False)
+    p = conv_q.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8, 3))
+    yq = conv_q.apply(p, x)
+    yf = conv_f.apply(p, x)
+    rel = float(jnp.max(jnp.abs(yq - yf)) / (jnp.max(jnp.abs(yf)) + 1e-9))
+    assert rel < 0.05                                           # 8-bit: ~0.4% steps
+
+
+def test_gradients_flow_through_quantized_layers():
+    layer = QDense(8, 4, weight_bits=4, act_bits=4, relu=True)
+    p = layer.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+
+    def loss(p):
+        return jnp.sum(jnp.square(layer.apply(p, x)))
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.sum(jnp.abs(g["w"]))) > 0.0               # STE passes grads
+    assert np.all(np.isfinite(np.asarray(g["w"])))

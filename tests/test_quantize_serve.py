@@ -1,0 +1,84 @@
+"""Deployment quantization (Model.quantize_params) across arch families:
+int8 forward parity, SSM projections included, decode path, and the spec
+machinery the dry-run uses for quantized cells."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import Model
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "falcon-mamba-7b",
+                                  "qwen2-vl-2b"])
+def test_quantized_forward_parity(arch):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    q = model.quantize_params(params, bits=8)
+
+    if cfg.embed_inputs:
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 8),
+                                              0, cfg.vocab)}
+    else:
+        batch = {"embeds": jax.random.normal(jax.random.PRNGKey(1),
+                                             (1, 8, cfg.d_model))}
+    lf, _ = model.train_logits(params, batch)
+    lq, _ = model.train_logits(q, batch)
+    # top-1 agreement on most positions
+    agree = float((jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).mean())
+    assert agree >= 0.75, agree
+
+
+def test_quantized_decode_runs():
+    cfg = get_config("falcon-mamba-7b").reduced()
+    model = Model(cfg)
+    params = model.quantize_params(model.init(jax.random.PRNGKey(0)), bits=8)
+    caches = model.cache_init(1, 8)
+    logits, _ = model.decode_step(params, caches, jnp.zeros((1, 1), jnp.int32),
+                                  jnp.zeros((), jnp.int32))
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+def test_int8_weights_actually_int8():
+    cfg = get_config("llama3-8b").reduced()
+    model = Model(cfg)
+    q = model.quantize_params(model.init(jax.random.PRNGKey(0)), bits=8)
+    kinds = {l.dtype for l in jax.tree.leaves(q)}
+    assert jnp.dtype(jnp.int8) in kinds
+    # int8 leaves hold most of the parameter volume
+    n_int = sum(l.size for l in jax.tree.leaves(q) if l.dtype == jnp.int8)
+    n_all = sum(l.size for l in jax.tree.leaves(q))
+    assert n_int / n_all > 0.5
+
+
+def test_quantized_specs_match_structure():
+    """The dry-run's quantized spec tree lines up leaf-for-leaf with the
+    quantized params (incl. the scan-stacked scale-dim-1 rule)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.dryrun import _quantized_specs
+    from repro.parallel.sharding import use_mesh_rules
+
+    cfg = get_config("falcon-mamba-7b").reduced()
+    model = Model(cfg)
+    with use_mesh_rules(None):
+        pspecs = model.param_specs()
+    sds = jax.eval_shape(
+        lambda k: model.quantize_params(model.init(k), 8), jax.random.PRNGKey(0))
+    qspecs = _quantized_specs(sds, pspecs)
+    leaves_s = jax.tree.leaves(sds)
+    leaves_p = jax.tree.leaves(qspecs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_s) == len(leaves_p)
+    # every scale dim of size 1 must be unsharded
+    flat = jax.tree_util.tree_flatten_with_path(sds)[0]
+    specs = jax.tree_util.tree_flatten_with_path(
+        qspecs, is_leaf=lambda x: isinstance(x, P))[0]
+    for (path, leaf), (_, spec) in zip(flat, specs):
+        if str(path[-1]) == "['w_scale']" or "w_scale" in str(path[-1]):
+            padded = list(spec) + [None] * (leaf.ndim - len(spec))
+            for dim, entry in zip(leaf.shape, padded):
+                if dim == 1:
+                    assert entry is None, (path, leaf.shape, spec)

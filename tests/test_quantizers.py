@@ -1,0 +1,147 @@
+"""Quantizer unit + property tests (hypothesis): range bounds, idempotence,
+STE gradients, po2 scales — the invariants C1 rests on."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizers import (
+    BinaryQuantizer,
+    FixedPointQuantizer,
+    IntQuantizer,
+    TernaryQuantizer,
+    fake_quant_act,
+    make_quantizer,
+    quantize_po2,
+    ste_clip,
+    ste_round,
+    ste_sign,
+)
+
+
+# ---------------------------------------------------------------------------
+# STE primitives
+# ---------------------------------------------------------------------------
+
+def test_ste_round_values_and_grad():
+    x = jnp.asarray([-1.7, -0.5, 0.2, 0.5, 1.49])
+    np.testing.assert_array_equal(np.asarray(ste_round(x)), np.round(np.asarray(x)))
+    g = jax.grad(lambda x: jnp.sum(ste_round(x)))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.ones(5))   # identity grad
+
+
+def test_ste_clip_grad_masks_outside():
+    x = jnp.asarray([-2.0, -0.5, 0.5, 2.0])
+    g = jax.grad(lambda x: jnp.sum(ste_clip(x, -1.0, 1.0)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 0.0])
+
+
+def test_ste_sign_hard_tanh_grad():
+    x = jnp.asarray([-3.0, -0.9, 0.0, 0.9, 3.0])
+    y = ste_sign(x)
+    np.testing.assert_array_equal(np.asarray(y), [-1, -1, 1, 1, 1])
+    g = jax.grad(lambda x: jnp.sum(ste_sign(x)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# fixed point (QKeras quantized_bits)
+# ---------------------------------------------------------------------------
+
+def test_fixed_point_grid():
+    q = FixedPointQuantizer(bits=8, integer=2)
+    assert q.step == 2.0 ** -5
+    assert q.qmin == -4.0 and q.qmax == 4.0 - 2.0 ** -5
+    x = jnp.asarray([0.1, -3.99, 10.0, -10.0])
+    y = np.asarray(q(x))
+    assert abs(y[0] - 0.09375) < 1e-6          # snapped to grid
+    assert y[2] == pytest.approx(q.qmax)       # saturates high
+    assert y[3] == pytest.approx(q.qmin)       # saturates low
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 4))
+def test_fixed_point_idempotent(bits, integer):
+    q = FixedPointQuantizer(bits=bits, integer=integer)
+    x = jnp.linspace(-10, 10, 101)
+    y1 = q(x)
+    y2 = q(y1)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int quantizer (Brevitas style)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8), st.booleans(), st.booleans())
+def test_int_quantizer_bounded_error(bits, po2, narrow):
+    q = IntQuantizer(bits=bits, po2=po2, narrow=narrow)
+    x = jnp.asarray(np.random.default_rng(bits).standard_normal(256) * 3)
+    y = q(x)
+    s = float(jnp.max(q.scale(x)))
+    # max quantization error is half a step (po2 snap can double the scale)
+    bound = s * (1.0 if po2 else 0.5) + 1e-6
+    assert float(jnp.max(jnp.abs(y - jnp.clip(x, q.qmin * s, q.qmax * s)))) <= bound
+
+
+def test_int_quantizer_int_codes_in_range():
+    q = IntQuantizer(bits=4, narrow=True)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((32, 8)))
+    codes, s = q.quantize_int(x)
+    assert codes.dtype == jnp.int8
+    assert int(codes.min()) >= -7 and int(codes.max()) <= 7   # narrow: [-7, 7]
+    np.testing.assert_allclose(np.asarray(codes * s), np.asarray(q(x)), atol=1e-6)
+
+
+def test_per_channel_scales():
+    q = IntQuantizer(bits=8, axis=0)
+    x = jnp.stack([jnp.ones(4) * 0.1, jnp.ones(4) * 100.0])   # wildly different rows
+    y = q(x.T)   # axis=0 -> per-column of (4, 2)
+    rel_err = jnp.abs(y - x.T) / jnp.abs(x.T)
+    assert float(jnp.max(rel_err)) < 0.01      # both channels well resolved
+
+
+def test_po2_scale_is_power_of_two():
+    s = quantize_po2(jnp.asarray([0.3, 1.5, 100.0]))
+    logs = np.log2(np.asarray(s))
+    np.testing.assert_allclose(logs, np.round(logs), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# binary / ternary
+# ---------------------------------------------------------------------------
+
+def test_binary_quantizer_bipolar():
+    q = BinaryQuantizer()
+    y = np.asarray(q(jnp.asarray([-0.3, 0.0, 2.0])))
+    np.testing.assert_array_equal(y, [-1.0, 1.0, 1.0])
+
+
+def test_ternary_quantizer_deadzone():
+    q = TernaryQuantizer(threshold=0.5)
+    y = np.asarray(q(jnp.asarray([-1.0, -0.2, 0.0, 0.2, 1.0])))
+    np.testing.assert_array_equal(y, [-1.0, 0.0, 0.0, 0.0, 1.0])
+
+
+def test_make_quantizer_dispatch():
+    assert make_quantizer(32) is None
+    assert isinstance(make_quantizer(1), BinaryQuantizer)
+    assert isinstance(make_quantizer(8, "fixed"), FixedPointQuantizer)
+    assert isinstance(make_quantizer(4), IntQuantizer)
+    assert make_quantizer(8).bits == 8
+
+
+def test_fake_quant_act_bits16_identity():
+    x = jnp.asarray([1.234, -9.87])
+    np.testing.assert_array_equal(np.asarray(fake_quant_act(x, 16)), np.asarray(x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8))
+def test_fake_quant_reduces_distinct_values(bits):
+    x = jnp.asarray(np.random.default_rng(7).standard_normal(512))
+    y = np.asarray(fake_quant_act(x, bits))
+    assert len(np.unique(y)) <= 2 ** bits

@@ -1,0 +1,122 @@
+"""Roofline analysis + launcher smoke tests (reads the real dry-run
+artifacts when present; otherwise synthesizes a record)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_BF16,
+    PEAK_INT8,
+    RooflineRow,
+    analyze,
+    load_artifacts,
+    render_table,
+)
+
+
+def _fake_record(**kw):
+    rec = {
+        "arch": "llama3-8b", "shape": "train_4k", "mesh": "single",
+        "tag": "baseline", "quant_bits": 16, "status": "ok",
+        "n_devices": 256,
+        "hlo_flops_per_device": 1e15,
+        "collective_bytes_per_device": 5e10,
+        "xla_cost_analysis": {"flops": 1e15, "bytes_accessed": 2e14},
+        "memory_analysis": {"output_size_in_bytes": 1e12},
+        "state_local_bytes": 1e9, "cache_local_bytes": 0,
+    }
+    rec.update(kw)
+    return rec
+
+
+def test_roofline_terms_formulae():
+    row = analyze(_fake_record())
+    assert row.t_compute == pytest.approx(1e15 / PEAK_BF16)
+    assert row.t_collective == pytest.approx(5e10 / ICI_BW)
+    # memory term uses max(xla_bytes/dev, working set)
+    assert row.t_memory >= (2e14 / 256) / HBM_BW
+    assert row.dominant in ("compute", "memory", "collective")
+
+
+def test_quantized_cell_uses_int8_peak():
+    r16 = analyze(_fake_record())
+    r8 = analyze(_fake_record(quant_bits=8))
+    assert r8.t_compute == pytest.approx(r16.t_compute / 2)
+
+
+def test_dominant_term_selection():
+    row = analyze(_fake_record(collective_bytes_per_device=1e13))
+    assert row.dominant == "collective"
+    row = analyze(_fake_record(hlo_flops_per_device=1e17,
+                               collective_bytes_per_device=0.0))
+    assert row.dominant == "compute"
+
+
+def test_skipped_cells_pass_through():
+    row = analyze({"arch": "hubert-xlarge", "shape": "decode_32k",
+                   "mesh": "single", "tag": "baseline", "status": "skipped",
+                   "reason": "encoder-only"})
+    assert row.status == "skipped"
+    txt = render_table([row])
+    assert "skipped" in txt
+
+
+@pytest.mark.skipif(not os.path.isdir("artifacts/dryrun"),
+                    reason="no dry-run artifacts")
+def test_real_artifacts_sane():
+    """Every ok cell: positive terms, useful ratio in (0, 1.5], and the
+    full 40-cell assignment is present for both meshes."""
+    rows = [analyze(r) for r in load_artifacts("artifacts/dryrun")]
+    by_mesh = {}
+    for r in rows:
+        by_mesh.setdefault((r.mesh, r.tag), []).append(r)
+    for mesh in ("single", "multi"):
+        cells = by_mesh.get((mesh, "baseline"), [])
+        assert len(cells) == 40, (mesh, len(cells))
+        ok = [r for r in cells if r.status == "ok"]
+        skipped = [r for r in cells if r.status == "skipped"]
+        assert len(ok) == 32 and len(skipped) == 8
+        for r in ok:
+            assert r.t_compute > 0, (r.arch, r.shape)
+            assert 0 < r.useful_ratio <= 1.5, (r.arch, r.shape, r.useful_ratio)
+
+
+def test_strategy_rules_shapes():
+    from repro.configs import get_config
+    from repro.launch.dryrun import STRATEGIES, strategy_rules
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    cfg = get_config("llama3-8b")
+    for s in STRATEGIES:
+        rules = strategy_rules(s, cfg, FakeMesh(), None)
+        assert isinstance(rules, dict)
+    assert strategy_rules("fsdp2d", cfg, FakeMesh(), None)["batch"] == (
+        "data", "model")
+    assert strategy_rules("tponly", cfg, FakeMesh(), None)["fsdp"] is None
+    with pytest.raises(ValueError):
+        strategy_rules("nope", cfg, FakeMesh(), None)
+
+
+def test_launch_train_main_smoke(tmp_path):
+    from repro.launch.train import main
+
+    res = main(["--arch", "internlm2-1.8b", "--reduced", "--steps", "6",
+                "--batch", "2", "--seq", "16", "--ckpt-dir", str(tmp_path),
+                "--ckpt-every", "3"])
+    assert res.final_step == 6
+
+
+def test_launch_serve_main_smoke():
+    from repro.launch.serve import main
+
+    stats = main(["--arch", "internlm2-1.8b", "--requests", "2",
+                  "--max-new", "3", "--max-len", "32"])
+    assert stats["n_requests"] == 2

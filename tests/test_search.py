@@ -1,0 +1,72 @@
+"""Hardware-aware NAS drivers: ASHA promotion semantics, BO-lite vs random,
+Pareto front extraction (paper §3.1.1 / §3.2.1)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.search import Choice, asha_search, bo_search, pareto_front, sample_config
+
+SPACE = [
+    Choice("filters", (2, 4, 8, 16)),
+    Choice("kernel", (1, 2, 3)),
+    Choice("bits", (1, 2, 3, 4, 8)),
+]
+
+
+def _objective_planted(cfg, budget, rng):
+    """Smooth objective with a planted optimum at (16, 3, 4); budget adds
+    resolution (less noise), as in real epochs-as-budget searches."""
+    score = -abs(cfg["filters"] - 16) / 16 - abs(cfg["kernel"] - 3) / 3 \
+        - abs(cfg["bits"] - 4) / 8
+    noise = rng.normal(0, 0.25 / math.sqrt(budget))
+    return score + noise
+
+
+def test_asha_finds_planted_optimum_region():
+    best, trials = asha_search(_objective_planted, SPACE, n_trials=64,
+                               r_min=1, eta=2, max_rung=4, seed=0)
+    assert best.config["filters"] >= 8            # near-optimal region
+    assert best.rung >= 2                         # actually promoted
+
+
+def test_asha_spends_more_budget_on_good_trials():
+    best, trials = asha_search(_objective_planted, SPACE, n_trials=32, seed=1)
+    budgets = np.array([t.budget_used for t in trials])
+    scores = np.array([t.score for t in trials])
+    # correlation between final score and budget spent must be positive
+    good = budgets[scores >= np.median(scores)].mean()
+    bad = budgets[scores < np.median(scores)].mean()
+    assert good > bad
+
+
+def test_asha_halts_bad_trials():
+    _, trials = asha_search(_objective_planted, SPACE, n_trials=32, seed=2)
+    assert any(not t.alive for t in trials)       # some were halted
+
+
+def test_bo_beats_random_on_average():
+    rng = np.random.default_rng(0)
+
+    def noiseless(cfg, budget, rng_):
+        return _objective_planted(cfg, 10_000, rng)
+
+    best_bo, hist = bo_search(noiseless, SPACE, n_trials=40, n_startup=8, seed=3)
+    bo_best_score = max(s for _, s in hist)
+    rand_scores = [noiseless(sample_config(SPACE, rng), 1, rng)
+                   for _ in range(40)]
+    assert bo_best_score >= np.max(rand_scores) - 0.05
+
+
+def test_pareto_front():
+    # (cost, accuracy)
+    pts = [(1.0, 0.5), (2.0, 0.8), (3.0, 0.7), (0.5, 0.2), (2.5, 0.9)]
+    front = pareto_front(pts)
+    assert set(front) == {3, 0, 1, 4}             # 2 is dominated by 1
+
+
+def test_sample_config_covers_space():
+    rng = np.random.default_rng(0)
+    seen = {sample_config(SPACE, rng)["bits"] for _ in range(200)}
+    assert seen == {1, 2, 3, 4, 8}

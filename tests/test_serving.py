@@ -1,0 +1,93 @@
+"""Serving engine: continuous batching correctness — engine outputs match a
+sequential single-request decode; slots recycle; stats populate."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.serving.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _greedy_reference(model, params, prompt, n_new, max_len):
+    """Sequential single-sequence greedy decode (ground truth)."""
+    caches = model.cache_init(1, max_len)
+    toks = list(prompt)
+    decode = jax.jit(model.decode_step)
+    out = []
+    for t in range(len(prompt) + n_new - 1):
+        cur = jnp.asarray(t, jnp.int32)
+        tok = jnp.asarray([[toks[t]]], jnp.int32)
+        logits, caches = decode(params, caches, tok, cur)
+        nxt = int(jnp.argmax(logits[0, 0]))
+        if t >= len(prompt) - 1:
+            out.append(nxt)
+            if len(out) >= n_new:
+                break
+            toks.append(nxt)
+    return out
+
+
+def test_engine_matches_sequential_decode(setup):
+    cfg, model, params = setup
+    prompt = np.asarray([3, 17, 42, 7], np.int32)
+    n_new = 6
+    ref = _greedy_reference(model, params, prompt, n_new, max_len=32)
+
+    eng = ServeEngine(model, params, n_slots=2, max_len=32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=n_new)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.output == ref
+
+
+def test_continuous_batching_multiple_requests(setup):
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, n_slots=2, max_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 3).astype(np.int32),
+                    max_new_tokens=4) for i in range(5)]   # 5 reqs > 2 slots
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert len(eng.finished) == 5
+    for r in reqs:
+        assert len(r.output) == 4
+    # each request's output matches its own sequential decode (slot isolation)
+    for r in reqs[:2]:
+        ref = _greedy_reference(model, params, r.prompt, 4, max_len=32)
+        assert r.output == ref, (r.uid, r.output, ref)
+
+
+def test_eos_frees_slot_early(setup):
+    cfg, model, params = setup
+    prompt = np.asarray([1, 2], np.int32)
+    ref = _greedy_reference(model, params, prompt, 1, max_len=16)
+    eos = ref[0]
+    eng = ServeEngine(model, params, n_slots=1, max_len=16)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=10, eos_id=eos)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert req.output[-1] == eos and len(req.output) < 10
+
+
+def test_stats(setup):
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, n_slots=2, max_len=16)
+    eng.submit(Request(uid=0, prompt=np.asarray([5], np.int32),
+                       max_new_tokens=3))
+    eng.run_until_drained()
+    s = eng.stats()
+    assert s["n_requests"] == 1
+    assert s["throughput_tok_s"] > 0
+    assert s["mean_ttft_s"] >= 0

@@ -1,0 +1,140 @@
+"""End-to-end system tests: the paper's full codesign methodology (§5) run on
+synthetic stand-ins — train QAT -> fold BN -> streamline to integers ->
+deploy report — plus the bit-width descent of Fig. 4."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.codesign import bitwidth_descent, deploy_report, train_tiny
+from repro.core.qlayers import QDense, QDenseBatchNorm
+from repro.core.streamline import streamline_mlp
+from repro.data.synthetic import SyntheticMelWindows, SyntheticMFCC
+from repro.models.tiny import ADAutoencoder, KWSMLP
+
+
+def _auc(scores, labels):
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=float)
+    ranks[order] = np.arange(len(scores))
+    pos = labels == 1
+    n_pos, n_neg = pos.sum(), (~pos).sum()
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return (ranks[pos].sum() - n_pos * (n_pos - 1) / 2) / (n_pos * n_neg)
+
+
+def test_ad_workflow_end_to_end():
+    """AD task: QAT-train the autoencoder on normal windows, then anomaly
+    scores must separate planted anomalies (AUC well above chance) — the
+    system-level analogue of paper Table 4's AUC column."""
+    model = ADAutoencoder(weight_bits=8, act_bits=8)
+    data = SyntheticMelWindows(seed=0)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def loss_fn(ps, batch):
+        recon, _ = model.apply(ps, batch, train=False)
+        return jnp.mean(jnp.square(recon - batch))
+
+    def batch_fn(step):
+        x, _ = data.batch(step, 64)                  # normals only
+        return jnp.asarray(x)
+
+    params, losses = train_tiny(loss_fn, params, batch_fn, steps=150, lr=2e-3)
+    assert losses[-1] < 0.7 * losses[0]              # actually learned
+    # (8-bit QAT caps how far the recon loss can fall; the real quality
+    # criterion is the AUC below)
+
+    x, y = data.batch(10_000, 400, anomaly_frac=0.25)
+    scores = np.asarray(model.anomaly_score(params, jnp.asarray(x)))
+    auc = _auc(scores, y)
+    assert auc > 0.8, auc
+
+
+def test_kws_workflow_with_streamlined_deployment():
+    """KWS task: QAT-train a small same-structure MLP, streamline to integer
+    thresholds, and check the integer deployment predicts the same classes
+    as the float graph on held-out data."""
+    dims = [16, 12, 12]
+    bits = 4
+    layer_defs = [QDenseBatchNorm(dims[i], dims[i + 1], weight_bits=bits,
+                                  act_bits=bits) for i in range(2)]
+    head_def = QDense(dims[-1], 4, weight_bits=32, act_bits=32)
+
+    key = jax.random.PRNGKey(0)
+    params = {
+        "hidden": [l.init(k) for l, k in zip(layer_defs, jax.random.split(key, 2))],
+        "head": head_def.init(jax.random.fold_in(key, 5)),
+    }
+
+    protos = jax.random.normal(jax.random.PRNGKey(42), (4, 16)) * 2.0
+
+    def make_batch(step):
+        k = jax.random.PRNGKey(step)
+        y = jax.random.randint(k, (64,), 0, 4)
+        x = protos[y] + 0.5 * jax.random.normal(jax.random.fold_in(k, 1), (64, 16))
+        return x, y
+
+    def forward(ps, x, train):
+        h = x
+        new_hidden = []
+        for l, p in zip(layer_defs, ps["hidden"]):
+            h, p = l.apply(p, h, train=train)
+            new_hidden.append(p)
+        return head_def.apply(ps["head"], h, train=train), new_hidden
+
+    def loss_fn(ps, batch):
+        x, y = batch
+        logits, _ = forward(ps, x, train=False)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, y[:, None], 1)[:, 0]
+        return jnp.mean(lse - lab)
+
+    params, losses = train_tiny(loss_fn, params, make_batch, steps=200, lr=3e-3)
+    assert losses[-1] < 0.5 * losses[0]
+
+    # update BN stats with a few train-mode passes
+    for s in range(5):
+        x, _ = make_batch(1000 + s)
+        _, params["hidden"] = forward(params, x, train=True)
+
+    # ---- deploy: streamline to integer thresholds ----
+    in_scale = 0.1
+    smlp = streamline_mlp(layer_defs, params["hidden"], in_scale,
+                          params["head"])
+    x, y = make_batch(99_999)
+    x_int = jnp.clip(jnp.round(x / in_scale), -127, 127).astype(jnp.int32)
+    pred_int = np.asarray(smlp.predict(x_int))
+
+    logits_float, _ = forward(params, x_int.astype(jnp.float32) * in_scale,
+                              train=False)
+    pred_float = np.asarray(jnp.argmax(logits_float, -1))
+
+    agreement = (pred_int == pred_float).mean()
+    assert agreement > 0.9, agreement
+    acc = (pred_int == np.asarray(y)).mean()
+    assert acc > 0.7, acc                           # deployed graph still works
+
+
+def test_bitwidth_descent_finds_cliff():
+    """Fig. 4 procedure on a synthetic quality curve with a cliff below 3
+    bits (the paper's observed behaviour)."""
+
+    def eval_at_bits(bits):
+        quality = 0.9 if bits >= 3 else 0.9 - 0.2 * (3 - bits)
+        return quality, bits * 100.0
+
+    res = bitwidth_descent(eval_at_bits, bit_ladder=(32, 8, 6, 4, 3, 2, 1),
+                           tolerance=0.02)
+    assert res.chosen_bits == 3
+    assert len(res.entries) == 7
+
+
+def test_deploy_report_roofline_terms():
+    cost = KWSMLP().cost()
+    rep = deploy_report(cost, batch=1, bits=3)
+    assert rep["latency_us"] > 0 and rep["energy_uJ"] > 0
+    assert rep["bound"] in ("memory", "compute")
+    # tiny MLP at batch 1 is definitively memory-bound on a TPU
+    assert rep["bound"] == "memory"

@@ -1,0 +1,103 @@
+"""The paper's four MLPerf Tiny submission models: parameter counts vs
+Table 1, forward shapes, BOPs cost tables, and the AD anomaly score."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.bops import dense_bops, inference_cost
+from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
+
+
+def test_cnv_weight_count_matches_paper():
+    assert CNVModel().n_weights() == 1_542_848        # Table 1, IC (FINN)
+
+
+def test_kws_weight_count_matches_paper():
+    assert KWSMLP().n_weights() == 259_584            # Table 1, KWS
+
+
+def test_ad_param_count_near_paper():
+    n = ADAutoencoder().n_params()
+    # paper Table 1: 22 285 params. The paper's prose (5 hidden layers,
+    # width 72, 128-d input) reads as 31 560 with BN; the exact layer list
+    # behind 22 285 is not published, so this is a same-order check.
+    assert n == 31_560
+    assert 0.5 < n / 22_285 < 2.0
+
+
+def test_ad_forward_and_score():
+    model = ADAutoencoder()
+    p = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 128))
+    recon, _ = model.apply(p, x, train=True)
+    assert recon.shape == (8, 128)
+    scores = model.anomaly_score(p, x)
+    assert scores.shape == (8,)
+    assert np.all(np.isfinite(np.asarray(scores)))
+
+
+def test_kws_forward():
+    model = KWSMLP()
+    p = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 490))
+    logits, _ = model.apply(p, x, train=True)
+    assert logits.shape == (4, 12)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_ic_forward():
+    model = ICModel()
+    p = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    logits = model.apply(p, x, train=True)
+    assert logits.shape == (2, 10)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_cnv_forward():
+    model = CNVModel()
+    p = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3))
+    logits = model.apply(p, x, train=True)
+    assert logits.shape == (1, 10)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+# ---------------------------------------------------------------------------
+# BOPs / cost model (paper Eqs. 1-2)
+# ---------------------------------------------------------------------------
+
+def test_dense_bops_eq1_hand_value():
+    # Eq.1, k=1: m*n*(ba*bw + ba + bw + log2(n))
+    v = dense_bops(m=4, n=8, b_a=3, b_w=3)
+    expected = 4 * 8 * (9 + 3 + 3 + np.log2(8))
+    assert v == pytest.approx(expected)
+
+
+def test_inference_cost_eq2_reference_is_one():
+    assert inference_cost(10.0, 20.0, 10.0, 20.0) == pytest.approx(1.0)
+    assert inference_cost(5.0, 20.0, 10.0, 20.0) == pytest.approx(0.75)
+
+
+def test_binary_bops_much_cheaper_than_8bit():
+    """The FINN IC model implements 26x the params of the hls4ml IC model but
+    binary ops are far cheaper — the paper's core cost trade."""
+    cnv = CNVModel().cost()
+    ic = ICModel().cost()
+    assert cnv.n_params > 10 * ic.n_params
+    # per-param BOPs of binary are way below 8-bit per-param BOPs
+    assert (cnv.bops / cnv.n_params) < 0.3 * (ic.bops / ic.n_params)
+
+
+def test_kws_cost_scales_with_bits():
+    c3 = KWSMLP(weight_bits=3, act_bits=3).cost()
+    c8 = KWSMLP(weight_bits=8, act_bits=8).cost()
+    assert c8.bops > 2.0 * c3.bops
+    assert c8.wm_bits == pytest.approx(c3.wm_bits * 8 / 3, rel=1e-6)
+
+
+def test_cost_table_renders():
+    t = ADAutoencoder().cost().table()
+    assert "TOTAL" in t and "fc0" in t

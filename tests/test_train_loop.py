@@ -1,0 +1,172 @@
+"""Fault-tolerant training loop: crash/resume, straggler watchdog -> elastic
+restart, checkpoint cadence — all with injected faults."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.checkpoint import latest_step
+from repro.train.loop import ElasticRestart, LoopConfig, LoopResult, run_training
+
+
+def _toy_setup():
+    """A deterministic 'training': state is a counter, step adds batch sum."""
+
+    def train_step(state, batch):
+        new = {"x": state["x"] + jnp.sum(batch)}
+        return new, {"loss": jnp.sum(batch)}
+
+    init_state = {"x": jnp.zeros(())}
+
+    def batch_fn(step):
+        return jnp.asarray([float(step)])
+
+    return train_step, init_state, batch_fn
+
+
+def test_runs_to_completion(tmp_path):
+    train_step, init_state, batch_fn = _toy_setup()
+    cfg = LoopConfig(total_steps=20, ckpt_every=5, ckpt_dir=str(tmp_path),
+                     log_every=5)
+    res = run_training(train_step, init_state, batch_fn, cfg)
+    assert res.final_step == 20
+    assert res.resumed_from is None
+    assert latest_step(str(tmp_path)) == 20
+
+
+def test_crash_and_exact_resume(tmp_path):
+    """Kill at step 13, resume, finish — final state equals the uninterrupted
+    run exactly (pipeline is a pure function of step)."""
+    train_step, init_state, batch_fn = _toy_setup()
+    cfg = LoopConfig(total_steps=20, ckpt_every=5, ckpt_dir=str(tmp_path),
+                     log_every=100)
+
+    class Boom(RuntimeError):
+        pass
+
+    def bomb(step):
+        if step == 13:
+            raise Boom()
+
+    with pytest.raises(Boom):
+        run_training(train_step, init_state, batch_fn, cfg, step_hook=bomb)
+    # crash-path checkpoint wrote step 13
+    assert latest_step(str(tmp_path)) == 13
+
+    res = run_training(train_step, init_state, batch_fn, cfg)
+    assert res.resumed_from == 13
+    assert res.final_step == 20
+
+    # ground truth: sum of 0..19
+    expected = sum(float(s) for s in range(20))
+    from repro.checkpoint.checkpoint import restore
+
+    final, _, _ = restore(str(tmp_path), init_state)
+    assert float(final["x"]) == expected
+
+
+def test_resume_loses_at_most_ckpt_every(tmp_path):
+    train_step, init_state, batch_fn = _toy_setup()
+    cfg = LoopConfig(total_steps=50, ckpt_every=10, ckpt_dir=str(tmp_path),
+                     log_every=100)
+
+    def bomb(step):
+        if step == 37:
+            raise KeyboardInterrupt()   # preemption signal path
+
+    with pytest.raises(KeyboardInterrupt):
+        run_training(train_step, init_state, batch_fn, cfg, step_hook=bomb)
+    assert latest_step(str(tmp_path)) == 37    # best-effort crash checkpoint
+
+
+def test_straggler_watchdog_triggers_elastic_restart(tmp_path):
+    """Inject persistent 10x step latency after warmup -> ElasticRestart with
+    a checkpoint, the signal the launcher uses to remap the mesh."""
+    train_step, init_state, batch_fn = _toy_setup()
+    cfg = LoopConfig(total_steps=1000, ckpt_every=1000, ckpt_dir=str(tmp_path),
+                     log_every=1000, slow_factor=3.0, max_consecutive_slow=4,
+                     watchdog_warmup=10)
+
+    clock = {"t": 0.0}
+    slow_from = 30
+
+    def time_fn():
+        return clock["t"]
+
+    def hook(step):
+        clock["t"] += 1.0 if step < slow_from else 10.0
+
+    with pytest.raises(ElasticRestart):
+        run_training(train_step, init_state, batch_fn, cfg, step_hook=hook,
+                     time_fn=time_fn)
+    assert latest_step(str(tmp_path)) is not None   # checkpointed before raise
+
+
+def test_transient_blip_does_not_restart(tmp_path):
+    """A single slow step (GC pause, retried DMA) must not trigger a restart."""
+    train_step, init_state, batch_fn = _toy_setup()
+    cfg = LoopConfig(total_steps=60, ckpt_every=100, ckpt_dir=str(tmp_path),
+                     log_every=100, slow_factor=3.0, max_consecutive_slow=4,
+                     watchdog_warmup=10)
+    clock = {"t": 0.0}
+
+    def time_fn():
+        return clock["t"]
+
+    def hook(step):
+        clock["t"] += 20.0 if step == 30 else 1.0   # one blip
+
+    res = run_training(train_step, init_state, batch_fn, cfg, step_hook=hook,
+                       time_fn=time_fn)
+    assert res.final_step == 60
+    assert res.straggler_events == 1
+
+
+def test_real_model_resume_bitexact(tmp_path):
+    """Integration: reduced llama3 trains 6 steps, crashes, resumes, and the
+    final params match an uninterrupted 6-step run bit-for-bit."""
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticTokens
+    from repro.models.model import Model
+    from repro.optim.adamw import make_optimizer
+    from repro.train.steps import TrainState, make_train_step
+
+    cfg = get_config("llama3-8b").reduced()
+    model = Model(cfg)
+    opt = make_optimizer(base_lr=1e-3, warmup=1, total=10)
+    data = SyntheticTokens(vocab=cfg.vocab, seq_len=16)
+    step_fn = jax.jit(make_train_step(model, opt))
+
+    def batch_fn(step):
+        b = data.batch(step, 2)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    def fresh_state():
+        params = model.init(jax.random.PRNGKey(0))
+        return TrainState(params=params, opt=opt.init(params))
+
+    # uninterrupted
+    s = fresh_state()
+    for t in range(6):
+        s, _ = step_fn(s, batch_fn(t))
+    ref = s
+
+    # interrupted at 4 (ckpt_every=2 -> checkpoint at 4), resumed
+    lcfg = LoopConfig(total_steps=6, ckpt_every=2, ckpt_dir=str(tmp_path),
+                      log_every=100)
+
+    def bomb(step):
+        if step == 4:
+            raise RuntimeError("preempted")
+
+    with pytest.raises(RuntimeError):
+        run_training(step_fn, fresh_state(), batch_fn, lcfg, step_hook=bomb)
+    res = run_training(step_fn, fresh_state(), batch_fn, lcfg)
+    assert res.resumed_from == 4 and res.final_step == 6
+
+    from repro.checkpoint.checkpoint import restore
+
+    final, _, _ = restore(str(tmp_path), fresh_state())
+    for a, b in zip(jax.tree.leaves(final.params), jax.tree.leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
