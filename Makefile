@@ -1,0 +1,16 @@
+.PHONY: test test-fast bench bench-table6 example
+
+test:            ## full tier-1 suite
+	./scripts/test.sh
+
+test-fast:       ## suite minus tests marked slow (QAT training loops)
+	./scripts/test.sh --fast
+
+bench:           ## every benchmark section
+	PYTHONPATH=src python -m benchmarks.run
+
+bench-table6:    ## MLPerf-Tiny scenario sweep over compiled deployments
+	PYTHONPATH=src python -m benchmarks.run --only table6
+
+example:         ## the end-to-end codesign + compiled-deployment example
+	PYTHONPATH=src python examples/mlperf_tiny_codesign.py

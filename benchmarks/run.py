@@ -25,6 +25,7 @@ from benchmarks import (
     table3_fusion,
     table4_ad_opts,
     table5_latency_energy,
+    table6_scenarios,
 )
 
 SECTIONS = {
@@ -33,6 +34,7 @@ SECTIONS = {
     "table3": table3_fusion.run,
     "table4": table4_ad_opts.run,
     "table5": table5_latency_energy.run,
+    "table6": table6_scenarios.run,
     "fig2": fig2_bo_scan.run,
     "fig3": fig3_asha_scan.run,
     "fig4": fig4_quant_scan.run,

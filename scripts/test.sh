@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command. Extra args pass through to pytest:
+#   scripts/test.sh            # full suite
+#   scripts/test.sh --fast     # skip tests marked slow
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -119,40 +119,55 @@ class Graph:
     def run(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         import jax.numpy as jnp
 
-        from repro.core.quantizers import IntQuantizer
-        from repro.core.streamline import multi_threshold
-
         env: Dict[str, np.ndarray] = dict(self.initializers)
         env.update(feeds)
         for node in self.nodes:
             x = [jnp.asarray(env[i]) for i in node.inputs]
-            if node.op == "Dense":
-                y = x[0] @ x[1]
-                if len(x) > 2:
-                    y = y + x[2]
-            elif node.op == "Relu":
-                y = jnp.maximum(x[0], 0)
-            elif node.op == "BatchNorm":
-                xx, gamma, beta, mu, var = x
-                eps = node.attrs.get("eps", 1e-3)
-                y = gamma * (xx - mu) / jnp.sqrt(var + eps) + beta
-            elif node.op == "Quant":
-                q = IntQuantizer(
-                    bits=node.quant.bits,
-                    signed=node.quant.signed,
-                    narrow=node.quant.narrow,
-                )
-                y = q(x[0])
-            elif node.op == "MultiThreshold":
-                y = multi_threshold(x[0].astype(jnp.int32), jnp.asarray(x[1]))
-            elif node.op == "TopK":
-                y = jnp.argmax(x[0], axis=-1)
-            elif node.op == "Mul":
-                y = x[0] * x[1]
-            else:
-                raise NotImplementedError(f"QIR op {node.op}")
-            env[node.outputs[0]] = np.asarray(y)
+            env[node.outputs[0]] = np.asarray(eval_node(node, x))
         return {o: env[o] for o in self.outputs}
+
+
+# ---------------------------------------------------------------------------
+# single-node evaluation (shared by Graph.run and repro.deploy's fallback)
+# ---------------------------------------------------------------------------
+
+def eval_node(node: Node, x: List):
+    """Evaluate one QIR node on already-fetched (jnp) input values.
+
+    Traceable — the deploy fallback stage calls this inside jit; Graph.run
+    wraps it eagerly per node.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.quantizers import IntQuantizer
+    from repro.core.streamline import multi_threshold
+
+    if node.op == "Dense":
+        y = x[0] @ x[1]
+        if len(x) > 2:
+            y = y + x[2]
+    elif node.op == "Relu":
+        y = jnp.maximum(x[0], 0)
+    elif node.op == "BatchNorm":
+        xx, gamma, beta, mu, var = x
+        eps = node.attrs.get("eps", 1e-3)
+        y = gamma * (xx - mu) / jnp.sqrt(var + eps) + beta
+    elif node.op == "Quant":
+        q = IntQuantizer(
+            bits=node.quant.bits,
+            signed=node.quant.signed,
+            narrow=node.quant.narrow,
+        )
+        y = q(x[0])
+    elif node.op == "MultiThreshold":
+        y = multi_threshold(x[0].astype(jnp.int32), jnp.asarray(x[1]))
+    elif node.op == "TopK":
+        y = jnp.argmax(x[0], axis=-1)
+    elif node.op == "Mul":
+        y = x[0] * x[1]
+    else:
+        raise NotImplementedError(f"QIR op {node.op}")
+    return y
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +183,15 @@ def export_qmlp(layer_defs, params_list, head_params, meta=None) -> Graph:
         g.initializers[wname] = np.asarray(p["w"])
         g.initializers[bname] = np.asarray(p["b"])
         out = f"h{i}_fc"
-        g.nodes.append(Node("Dense", f"dense{i}", [prev, wname, bname], [out]))
+        g.nodes.append(
+            Node(
+                "Dense",
+                f"dense{i}",
+                [prev, wname, bname],
+                [out],
+                attrs={"weight_bits": getattr(ld, "weight_bits", 8)},
+            )
+        )
         prev = out
         if "gamma" in p:
             for stat in ("gamma", "beta", "mu", "sigma2"):

@@ -1,0 +1,35 @@
+"""repro.deploy — the QIR -> Pallas dataflow compiler and scenario runtime.
+
+Closes the paper's loop: quantization-aware training exports a QIR graph
+(``core.qir``), this package streamlines and fuses it into integer dataflow
+stages (``lower``), compiles the stage schedule into one jit program with an
+optional FIFO-sized streaming pipeline (``executor``), and measures it under
+the MLPerf Tiny load scenarios (``scenarios``).
+
+    graph = export_qmlp(...)
+    model = compile_graph(graph, in_scale=0.05)
+    logits = model.offline(x_int)                     # MLPerf Offline
+    reports = run_all_scenarios(model.offline, mk)    # the LoadGen sweep
+"""
+
+from repro.deploy.executor import (  # noqa: F401
+    CompiledJaxModel,
+    CompiledTinyModel,
+    StreamingStats,
+    compile_graph,
+)
+from repro.deploy.lower import (  # noqa: F401
+    FloatHeadStage,
+    FusedThresholdStage,
+    RefChainStage,
+    StageSchedule,
+    lower_graph,
+)
+from repro.deploy.scenarios import (  # noqa: F401
+    ScenarioReport,
+    multi_stream,
+    offline,
+    run_all_scenarios,
+    server_poisson,
+    single_stream,
+)

@@ -1,0 +1,294 @@
+"""QIR graph lowering: from an exported interchange graph to a stage schedule.
+
+This is the compiler half of the paper's deployment flow (FINN's
+``Streamline -> to-HLS-layers`` stage, hls4ml's ``convert``): walk a
+``core.qir.Graph``, greedily fuse every
+
+    Dense -> [BatchNorm] -> Relu -> Quant
+
+chain into a single integer dataflow stage (int8 matmul -> int32 accumulator
+-> multi-threshold) by calling ``core.streamline.streamline_dense``, and emit
+a static ``StageSchedule`` the executor turns into one jit program.
+
+Three stage kinds cover every exported graph:
+
+  * ``FusedThresholdStage`` — the streamlined integer stage; runs on the
+    fused Pallas kernel (``kernels.ops.threshold_matmul``) on TPU, or as the
+    XLA-fused jnp reference inside the same jit program on CPU.
+  * ``FloatHeadStage``      — the final Dense head: int codes -> float
+    logits in one affine (the paper drops softmax; argmax suffices).
+  * ``RefChainStage``       — fallback: any suffix of nodes the matcher does
+    not recognize runs through a float JAX interpreter, so *any* exported
+    graph is executable (just not fused).
+
+The schedule records value scales at every boundary so integer and float
+stages compose exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qir import Graph, Node
+from repro.core.streamline import (
+    ThresholdDense,
+    apply_threshold_dense,
+    multi_threshold_sorted,
+    streamline_dense,
+)
+
+
+# ---------------------------------------------------------------------------
+# stage kinds
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FusedThresholdStage:
+    """One streamlined integer dataflow stage (see core/streamline.py)."""
+
+    name: str
+    stage: ThresholdDense
+    in_dim: int
+    out_dim: int
+    in_scale: float
+
+    @property
+    def out_scale(self) -> float:
+        return self.stage.out_scale
+
+    def apply_ref(self, x_int):
+        return apply_threshold_dense(self.stage, x_int)
+
+    def apply_fast(self, x_int):
+        """CPU/XLA path: int32 matmul + sorted-bank searchsorted activation
+        — bit-identical to ``apply_ref`` but O(log S) in the step count."""
+        acc = jnp.matmul(x_int.astype(jnp.int32),
+                         self.stage.w_int.astype(jnp.int32))
+        return multi_threshold_sorted(acc, self.stage.thresholds)
+
+    def apply_kernel(self, x_int, *, interpret: Optional[bool] = None):
+        from repro.kernels import ops
+
+        # int32, not int8: inter-stage codes are UNSIGNED in
+        # [0, 2^act_bits - 1], so 8-bit activations (128..255) would wrap
+        # negative under an int8 cast. The kernel takes either width.
+        return ops.threshold_matmul(
+            x_int.astype(jnp.int32), self.stage.w_int, self.stage.thresholds,
+            interpret=interpret)
+
+
+@dataclasses.dataclass
+class FloatHeadStage:
+    """Final affine head: logits = x_int * in_scale @ w + b (float out)."""
+
+    name: str
+    w: jnp.ndarray
+    b: jnp.ndarray
+    in_dim: int
+    out_dim: int
+    in_scale: float
+
+    def apply_ref(self, x_int):
+        return x_int.astype(jnp.float32) @ self.w * self.in_scale + self.b
+
+
+@dataclasses.dataclass
+class RefChainStage:
+    """Fallback float interpreter over a run of QIR nodes.
+
+    Consumes the float value of its input (the executor multiplies integer
+    codes by ``in_scale`` first) and emits float; exact QIR.run semantics.
+    """
+
+    name: str
+    nodes: List[Node]
+    initializers: Dict[str, np.ndarray]
+    in_name: str
+    out_name: str
+    in_dim: int
+    out_dim: int
+    in_scale: float
+
+    def apply_ref(self, x_float):
+        from repro.core.qir import eval_node
+
+        env: Dict[str, jnp.ndarray] = {
+            k: jnp.asarray(v) for k, v in self.initializers.items()
+        }
+        env[self.in_name] = x_float
+        for node in self.nodes:
+            env[node.outputs[0]] = eval_node(node, [env[i] for i in node.inputs])
+        return env[self.out_name]
+
+
+Stage = Union[FusedThresholdStage, FloatHeadStage, RefChainStage]
+
+
+@dataclasses.dataclass
+class StageSchedule:
+    """The static compilation artifact: an ordered list of stages plus the
+    input quantization contract (integer codes with ``in_scale`` step)."""
+
+    stages: List[Stage]
+    in_scale: float
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_fused(self) -> int:
+        return sum(isinstance(s, FusedThresholdStage) for s in self.stages)
+
+    def layer_dims(self) -> List[int]:
+        dims = [self.stages[0].in_dim]
+        for s in self.stages:
+            dims.append(s.out_dim)
+        return dims
+
+    def describe(self) -> str:
+        rows = [f"schedule: {len(self.stages)} stages "
+                f"({self.n_fused} fused int, in_scale={self.in_scale:g})"]
+        for s in self.stages:
+            kind = type(s).__name__
+            rows.append(f"  {s.name:16s} {kind:20s} {s.in_dim:>5d} -> {s.out_dim}")
+        return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# pattern matcher
+# ---------------------------------------------------------------------------
+
+def _dense_params(graph: Graph, node: Node) -> Optional[Dict[str, np.ndarray]]:
+    """Pull (w, b) for a Dense node; None if weights are not initializers."""
+    if len(node.inputs) < 2 or node.inputs[1] not in graph.initializers:
+        return None
+    w = graph.initializers[node.inputs[1]]
+    b = (graph.initializers.get(node.inputs[2])
+         if len(node.inputs) > 2 else None)
+    if b is None:
+        b = np.zeros((w.shape[1],), np.float32)
+    return {"w": w, "b": b}
+
+
+def _is_linear_value(graph: Graph, name: str) -> bool:
+    """True iff ``name`` has exactly one consumer and is not a graph output
+    — the condition for fusing it away without dropping a reader."""
+    if name in graph.outputs:
+        return False
+    return sum(name in n.inputs for n in graph.nodes) == 1
+
+
+def _match_fused_chain(graph: Graph, nodes: List[Node], i: int):
+    """Try to match Dense -> [BatchNorm] -> Relu -> Quant starting at i.
+
+    Returns (params, act_bits, weight_bits, n_consumed) or None. The chain
+    must be linear: each intermediate value feeds exactly the next node and
+    nothing else (fusion erases it from the runtime environment).
+    """
+    if nodes[i].op != "Dense":
+        return None
+    params = _dense_params(graph, nodes[i])
+    if params is None:
+        return None
+    j = i + 1
+    prev_out = nodes[i].outputs[0]
+    if not _is_linear_value(graph, prev_out):
+        return None
+    if j < len(nodes) and nodes[j].op == "BatchNorm" and nodes[j].inputs[0] == prev_out:
+        bn = nodes[j]
+        try:
+            stats = [graph.initializers[n] for n in bn.inputs[1:5]]
+        except KeyError:
+            return None
+        params.update(gamma=stats[0], beta=stats[1], mu=stats[2], sigma2=stats[3])
+        prev_out = bn.outputs[0]
+        j += 1
+        if not _is_linear_value(graph, prev_out):
+            return None
+    if not (j < len(nodes) and nodes[j].op == "Relu" and nodes[j].inputs[0] == prev_out):
+        return None
+    prev_out = nodes[j].outputs[0]
+    j += 1
+    if not _is_linear_value(graph, prev_out):
+        return None
+    if not (j < len(nodes) and nodes[j].op == "Quant"
+            and nodes[j].inputs[0] == prev_out and nodes[j].quant is not None):
+        return None
+    act_bits = nodes[j].quant.bits
+    weight_bits = nodes[i].attrs.get("weight_bits", act_bits)
+    return params, act_bits, weight_bits, j + 1 - i
+
+
+def lower_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
+                bn_eps: float = 1e-3) -> StageSchedule:
+    """Compile a QIR graph to a stage schedule.
+
+    ``in_scale`` is the float value of one integer step of the (already
+    quantized) network input — the paper's 8-bit input layer contract.
+    """
+    stages: List[Stage] = []
+    nodes = graph.nodes
+    scale = in_scale
+    i = 0
+    while i < len(nodes):
+        m = _match_fused_chain(graph, nodes, i)
+        if m is not None:
+            params, act_bits, weight_bits, consumed = m
+            td = streamline_dense(
+                params, weight_bits=weight_bits, act_bits=act_bits,
+                in_scale=scale, bn_eps=bn_eps)
+            stages.append(FusedThresholdStage(
+                name=nodes[i].name, stage=td,
+                in_dim=int(params["w"].shape[0]),
+                out_dim=int(params["w"].shape[1]),
+                in_scale=scale))
+            scale = td.out_scale
+            i += consumed
+            continue
+        node = nodes[i]
+        if node.op == "Dense" and i == len(nodes) - 1:
+            params = _dense_params(graph, node)
+            if params is not None:
+                stages.append(FloatHeadStage(
+                    name=node.name,
+                    w=jnp.asarray(params["w"], jnp.float32),
+                    b=jnp.asarray(params["b"], jnp.float32),
+                    in_dim=int(params["w"].shape[0]),
+                    out_dim=int(params["w"].shape[1]),
+                    in_scale=scale))
+                i += 1
+                continue
+        # fallback: sweep the rest of the graph into one reference chain
+        rest = nodes[i:]
+        in_name = rest[0].inputs[0]
+        out_name = graph.outputs[0] if graph.outputs else rest[-1].outputs[0]
+        in_dim = stages[-1].out_dim if stages else _guess_dim(graph, in_name)
+        out_dim = _guess_dim(graph, out_name, default=in_dim)
+        stages.append(RefChainStage(
+            name=f"ref[{rest[0].name}..{rest[-1].name}]",
+            nodes=list(rest),
+            initializers=dict(graph.initializers),
+            in_name=in_name,
+            out_name=out_name,
+            in_dim=in_dim,
+            out_dim=out_dim,
+            in_scale=scale))
+        scale = 1.0  # float domain from here on
+        i = len(nodes)
+    return StageSchedule(stages=stages, in_scale=in_scale,
+                         meta=dict(graph.meta))
+
+
+def _guess_dim(graph: Graph, name: str, default: int = 1) -> int:
+    """Best-effort feature dim for fallback bookkeeping (FIFO sizing only)."""
+    for node in graph.nodes:
+        if name in node.outputs and node.op in ("Dense",):
+            wname = node.inputs[1]
+            if wname in graph.initializers:
+                return int(graph.initializers[wname].shape[1])
+    if name in graph.initializers:
+        return int(graph.initializers[name].shape[-1])
+    return default

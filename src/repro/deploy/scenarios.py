@@ -1,0 +1,187 @@
+"""MLPerf-Tiny-style load scenarios over a compiled executor.
+
+MLPerf Tiny (Banbury et al. 2021) measures every submission under fixed load
+generators; the paper's Table 5 latency/energy numbers are its SingleStream
+results. This module reproduces the four LoadGen modes against any object
+with an ``offline(x) -> y`` callable (``deploy.executor`` compiled models):
+
+  * SingleStream — one query at a time, batch 1; report latency percentiles
+    (MLPerf scores the 90th percentile; we report p50/p90/p99).
+  * MultiStream  — N concurrent streams issued as one batch per step.
+  * Offline      — the whole query pool in one batch; max throughput.
+  * Server       — Poisson arrivals at a target QPS into a single queue;
+    latency includes queueing delay (the jitter the FIFO work absorbs).
+
+Energy has no Joulescope here, so each report carries the paper-style proxy:
+the roofline latency/energy model of ``core.codesign.deploy_report`` driven
+by the model's BOPs/weight bits (``core.bops``), next to a measured proxy
+``board_watts x measured_latency``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.codesign import CHIP_WATTS, deploy_report
+
+
+@dataclasses.dataclass
+class ScenarioReport:
+    scenario: str
+    n_queries: int
+    p50_ms: float
+    p90_ms: float
+    p99_ms: float
+    throughput_qps: float
+    energy_proxy_uJ: Optional[float] = None      # roofline (BOPs) model
+    measured_energy_uJ: Optional[float] = None   # board watts x wall latency
+    extras: Dict = dataclasses.field(default_factory=dict)
+
+    def row(self) -> Dict[str, object]:
+        d = {
+            "scenario": self.scenario,
+            "n": self.n_queries,
+            "p50_ms": round(self.p50_ms, 4),
+            "p90_ms": round(self.p90_ms, 4),
+            "p99_ms": round(self.p99_ms, 4),
+            "qps": round(self.throughput_qps, 1),
+        }
+        if self.energy_proxy_uJ is not None:
+            d["roofline_uJ"] = round(self.energy_proxy_uJ, 3)
+        if self.measured_energy_uJ is not None:
+            d["measured_uJ"] = round(self.measured_energy_uJ, 1)
+        d.update(self.extras)
+        return d
+
+
+def _percentiles(lat_s: List[float]) -> Dict[str, float]:
+    a = np.asarray(lat_s) * 1e3
+    return {"p50": float(np.percentile(a, 50)),
+            "p90": float(np.percentile(a, 90)),
+            "p99": float(np.percentile(a, 99))}
+
+
+def _finish(scenario, lats, n, span, model_cost=None, bits=8, **extras):
+    p = _percentiles(lats)
+    energy = None
+    if model_cost is not None:
+        energy = deploy_report(model_cost, batch=1, bits=bits)["energy_uJ"]
+    return ScenarioReport(
+        scenario=scenario, n_queries=n,
+        p50_ms=p["p50"], p90_ms=p["p90"], p99_ms=p["p99"],
+        throughput_qps=n / max(span, 1e-9),
+        energy_proxy_uJ=energy,
+        measured_energy_uJ=float(np.median(lats)) * CHIP_WATTS * 1e6,
+        extras=extras)
+
+
+def single_stream(infer: Callable, make_query: Callable[[int], np.ndarray],
+                  n_queries: int = 64, warmup: int = 3,
+                  model_cost=None, bits: int = 8) -> ScenarioReport:
+    """Batch-1 queries back to back; MLPerf scores p90 latency.
+
+    ``make_query(i)`` returns ONE unbatched sample; the scenario adds the
+    batch-1 axis (every scenario batches for itself).
+    """
+    for w in range(warmup):
+        jax.block_until_ready(infer(np.asarray(make_query(w))[None]))
+    lats = []
+    t_start = time.perf_counter()
+    for i in range(n_queries):
+        x = np.asarray(make_query(i))[None]
+        t0 = time.perf_counter()
+        jax.block_until_ready(infer(x))
+        lats.append(time.perf_counter() - t0)
+    span = time.perf_counter() - t_start
+    return _finish("SingleStream", lats, n_queries, span, model_cost, bits)
+
+
+def multi_stream(infer: Callable, make_query: Callable[[int], np.ndarray],
+                 n_streams: int = 8, n_queries: int = 64, warmup: int = 2,
+                 model_cost=None, bits: int = 8) -> ScenarioReport:
+    """N concurrent streams per step: one batched inference serves all
+    streams; a step's latency applies to every query in it."""
+    steps = max(1, n_queries // n_streams)
+    batch0 = np.stack([make_query(s) for s in range(n_streams)])
+    for _ in range(warmup):
+        jax.block_until_ready(infer(batch0))
+    lats = []
+    t_start = time.perf_counter()
+    for i in range(steps):
+        xb = np.stack([make_query(i * n_streams + s) for s in range(n_streams)])
+        t0 = time.perf_counter()
+        jax.block_until_ready(infer(xb))
+        lats.extend([time.perf_counter() - t0] * n_streams)
+    span = time.perf_counter() - t_start
+    return _finish("MultiStream", lats, steps * n_streams, span,
+                   model_cost, bits, streams=n_streams)
+
+
+def offline(infer: Callable, make_query: Callable[[int], np.ndarray],
+            n_samples: int = 256, warmup: int = 2,
+            model_cost=None, bits: int = 8) -> ScenarioReport:
+    """Whole pool in one batch; the throughput scenario."""
+    xb = np.stack([make_query(i) for i in range(n_samples)])
+    for _ in range(warmup):
+        jax.block_until_ready(infer(xb))
+    t0 = time.perf_counter()
+    jax.block_until_ready(infer(xb))
+    span = time.perf_counter() - t0
+    per_query = span / n_samples
+    return _finish("Offline", [per_query] * n_samples, n_samples, span,
+                   model_cost, bits, batch=n_samples)
+
+
+def server_poisson(infer: Callable, make_query: Callable[[int], np.ndarray],
+                   qps: float = 200.0, n_queries: int = 128, seed: int = 0,
+                   warmup: int = 3, model_cost=None, bits: int = 8
+                   ) -> ScenarioReport:
+    """Poisson arrivals into a single-worker queue.
+
+    Arrival times are drawn up front; the worker serves FIFO, so reported
+    latency = queueing delay + service time. This is MLPerf's Server mode
+    shrunk to one process: it answers "at what offered load do tails blow
+    up", which is the question the paper's FIFO sizing answers on-chip.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, n_queries))
+    for w in range(warmup):
+        jax.block_until_ready(infer(np.asarray(make_query(w))[None]))
+    lats = []
+    t_start = time.perf_counter()
+    free_at = 0.0
+    for i in range(n_queries):
+        now = time.perf_counter() - t_start
+        if now < arrivals[i]:
+            time.sleep(arrivals[i] - now)
+        x = np.asarray(make_query(i))[None]
+        jax.block_until_ready(infer(x))
+        done = time.perf_counter() - t_start
+        lats.append(done - arrivals[i])
+        free_at = done
+    span = free_at - arrivals[0]
+    return _finish("Server", lats, n_queries, span, model_cost, bits,
+                   offered_qps=qps)
+
+
+def run_all_scenarios(infer: Callable, make_query: Callable[[int], np.ndarray],
+                      n_queries: int = 64, n_streams: int = 8,
+                      offline_samples: int = 256, server_qps: float = 200.0,
+                      model_cost=None, bits: int = 8
+                      ) -> List[ScenarioReport]:
+    """The full MLPerf-Tiny sweep for one deployed model."""
+    return [
+        single_stream(infer, make_query, n_queries=n_queries,
+                      model_cost=model_cost, bits=bits),
+        multi_stream(infer, make_query, n_streams=n_streams,
+                     n_queries=n_queries, model_cost=model_cost, bits=bits),
+        offline(infer, make_query, n_samples=offline_samples,
+                model_cost=model_cost, bits=bits),
+        server_poisson(infer, make_query, qps=server_qps,
+                       n_queries=n_queries, model_cost=model_cost, bits=bits),
+    ]

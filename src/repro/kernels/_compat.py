@@ -1,0 +1,7 @@
+"""Version shims for the Pallas TPU API, shared by every kernel module."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x;
+# accept both so the kernels load on either side of the rename.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _mt_kernel(acc_ref, thr_ref, o_ref, *, n_steps: int):
     acc = acc_ref[...]                       # (bm, C) int32
@@ -57,7 +59,7 @@ def multi_threshold(acc: jnp.ndarray, thresholds: jnp.ndarray, *,
         ],
         out_specs=pl.BlockSpec((block_m, C), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((M, C), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
@@ -120,7 +122,7 @@ def threshold_matmul(
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

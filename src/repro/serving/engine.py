@@ -172,3 +172,103 @@ class ServeEngine:
             "mean_latency_s": float(np.mean(lats)),
             "throughput_tok_s": toks / max(span, 1e-9),
         }
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant tiny-model serving (repro.deploy integration)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TinyRequest:
+    """One inference request against a named tiny model."""
+
+    uid: int
+    model: str
+    x: np.ndarray                        # (features...,) single sample
+    submit_t: float = 0.0
+    done_t: float = 0.0
+    result: Optional[np.ndarray] = None
+
+
+class TinyModelServer:
+    """All Table-1 tiny models served concurrently from one shared queue.
+
+    The LM engine above batches sequences into decode slots; the tiny-model
+    analogue batches same-model requests into one ``offline`` call per step.
+    Tenants are compiled deployments (``repro.deploy`` executors, or anything
+    exposing ``offline(batch) -> outputs``); each engine step drains up to
+    ``max_batch`` queued requests *per tenant*, so a burst on one model
+    cannot starve the others — the slot fairness idea applied across models
+    instead of across sequences.
+    """
+
+    def __init__(self, models: Dict[str, Any], max_batch: int = 32):
+        self.models = dict(models)
+        self.max_batch = max_batch
+        self.queue: List[TinyRequest] = []
+        self.finished: List[TinyRequest] = []
+        self._uid = 0
+
+    def submit(self, model: str, x: np.ndarray) -> TinyRequest:
+        if model not in self.models:
+            raise KeyError(f"unknown tiny model {model!r}; "
+                           f"tenants: {sorted(self.models)}")
+        req = TinyRequest(uid=self._uid, model=model, x=np.asarray(x),
+                          submit_t=time.monotonic())
+        self._uid += 1
+        self.queue.append(req)
+        return req
+
+    def step(self) -> int:
+        """Admit and run one batch per tenant; returns #requests served."""
+        served = 0
+        by_model: Dict[str, List[TinyRequest]] = {}
+        remaining: List[TinyRequest] = []
+        for req in self.queue:
+            group = by_model.setdefault(req.model, [])
+            if len(group) < self.max_batch:
+                group.append(req)
+            else:
+                remaining.append(req)
+        self.queue = remaining
+        for name, group in by_model.items():
+            xb = jnp.asarray(np.stack([r.x for r in group]))
+            yb = np.asarray(jax.block_until_ready(
+                self.models[name].offline(xb)))
+            now = time.monotonic()
+            for r, y in zip(group, yb):
+                r.result = y
+                r.done_t = now
+                self.finished.append(r)
+            served += len(group)
+        return served
+
+    def run_until_drained(self, max_steps: int = 10_000) -> int:
+        steps = 0
+        while self.queue and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant and aggregate latency/throughput."""
+        if not self.finished:
+            return {}
+        out: Dict[str, Dict[str, float]] = {}
+        span = (max(r.done_t for r in self.finished)
+                - min(r.submit_t for r in self.finished))
+        for name in self.models:
+            lats = [r.done_t - r.submit_t for r in self.finished
+                    if r.model == name]
+            if not lats:
+                continue
+            out[name] = {
+                "n": len(lats),
+                "p50_ms": float(np.percentile(lats, 50) * 1e3),
+                "p99_ms": float(np.percentile(lats, 99) * 1e3),
+            }
+        out["_aggregate"] = {
+            "n": len(self.finished),
+            "throughput_qps": len(self.finished) / max(span, 1e-9),
+        }
+        return out

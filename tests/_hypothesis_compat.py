@@ -1,0 +1,103 @@
+"""Offline stand-in for ``hypothesis`` so property tests collect and run.
+
+The container has no network access and no ``hypothesis`` wheel. Rather than
+skipping every property test, this shim implements the tiny slice of the API
+the suite uses (``given``, ``settings``, ``strategies.integers/booleans/
+sampled_from/lists/tuples``) as a deterministic example generator: each
+``@given`` test runs ``max_examples`` pseudo-random draws from a fixed seed,
+so the properties are still exercised — just without shrinking or the
+database. When the real ``hypothesis`` is installed (requirements-dev.txt)
+it is used unchanged.
+
+Usage in tests:
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools  # noqa: F401 - used when real hypothesis present
+import random
+
+try:  # pragma: no cover - exercised when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A strategy is just a draw(rng) callable."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            elems = list(seq)
+            return _Strategy(lambda rng: elems[rng.randrange(len(elems))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elem.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    strategies = _Strategies()
+
+    def settings(max_examples: int = 20, **_kw):
+        """Record max_examples on the test function for ``given`` to read."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            inner = fn
+            n_default = getattr(fn, "_compat_max_examples", 20)
+
+            # NOTE: no functools.wraps — it would set __wrapped__ and pytest
+            # would resolve the inner signature's argument names as fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_compat_max_examples", n_default)
+                rng = random.Random(0xC0DE51)
+                for i in range(n):
+                    drawn = [s.draw(rng) for s in strats]
+                    try:
+                        inner(*drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise with repro info
+                        raise AssertionError(
+                            f"property falsified on example {i}: args={drawn!r}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -41,6 +41,7 @@ def test_compressed_psum_error_bounded():
     np.testing.assert_allclose(np.asarray(g - mean), np.asarray(err), atol=1e-7)
 
 
+@pytest.mark.slow
 def test_error_feedback_recovers_lost_mass():
     """Repeatedly sending the same gradient with EF converges the *cumulative*
     update to the true cumulative gradient (1-bit-Adam property)."""
@@ -84,6 +85,7 @@ def test_bytes_saved_accounting():
     assert collective_bytes_saved(g) == 1024 * 3        # f32 -> int8
 
 
+@pytest.mark.slow
 def test_ddp_compressed_step_trains():
     """Full explicit-DP step on a 1-device mesh: loss decreases."""
     from repro.optim.adamw import make_optimizer

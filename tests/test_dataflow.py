@@ -2,7 +2,7 @@
 and the shrink-to-max+1 pass."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.dataflow import (
     BIG_DEPTH,

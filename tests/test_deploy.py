@@ -1,0 +1,298 @@
+"""repro.deploy: QIR -> compiled executor parity and scenario runtime.
+
+The contract under test is the paper's: streamlining/fusion is *exact* —
+the compiled integer dataflow executor must produce bit-identical integer
+activations to the streamlined float reference (half-up rounding semantics,
+core/streamline.py) for the Table-1 MLP models, in every execution mode
+(offline jit program, FIFO-sized streaming pipeline, Pallas kernel path).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.qir import Graph, Node, export_qmlp
+from repro.core.streamline import (
+    float_ref_dense,
+    multi_threshold,
+    multi_threshold_sorted,
+)
+from repro.deploy import (
+    CompiledJaxModel,
+    FloatHeadStage,
+    FusedThresholdStage,
+    RefChainStage,
+    compile_graph,
+    lower_graph,
+)
+from repro.deploy.scenarios import (
+    offline,
+    run_all_scenarios,
+    server_poisson,
+    single_stream,
+)
+from repro.models.tiny import ADAutoencoder, KWSMLP
+from repro.serving.engine import TinyModelServer
+
+IN_SCALE = 1.0 / 127.0
+
+
+def _export(model, key=0):
+    params = model.init(jax.random.PRNGKey(key))
+    hidden_defs, _ = model.layers()
+    graph = export_qmlp(hidden_defs, params["hidden"], params["head"],
+                        meta={"model": type(model).__name__})
+    return graph, params, hidden_defs
+
+
+def _float_ref_chain(graph_model, x_int, hidden_defs, params, schedule):
+    """Stage-by-stage streamlined float reference (the streamline.py oracle)."""
+    h = x_int
+    scale = IN_SCALE
+    fused = [s for s in schedule.stages if isinstance(s, FusedThresholdStage)]
+    for ld, p, st in zip(hidden_defs, params["hidden"], fused):
+        h = float_ref_dense(p, h.astype(jnp.float32) * scale,
+                            weight_bits=ld.weight_bits, act_bits=ld.act_bits,
+                            s_out=st.stage.out_scale)
+        scale = st.stage.out_scale
+    logits = (h.astype(jnp.float32) @ params["head"]["w"] * scale
+              + params["head"]["b"])
+    return h, logits
+
+
+@pytest.mark.parametrize("model_cls,in_dim", [(KWSMLP, 490),
+                                              (ADAutoencoder, 128)])
+def test_compiled_executor_matches_streamlined_float_reference(model_cls, in_dim):
+    """Tentpole parity: compiled integer outputs == streamlined float ref,
+    exactly, for both Table-1 MLP models."""
+    model = model_cls()
+    graph, params, hidden_defs = _export(model)
+    cm = compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
+
+    x_int = jnp.asarray(
+        np.random.default_rng(0).integers(-127, 128, (16, in_dim)), jnp.int32)
+    outs = cm.stage_outputs(x_int)
+    ref_last_int, ref_logits = _float_ref_chain(model, x_int, hidden_defs,
+                                                params, cm.schedule)
+    # integer activations out of the last fused stage are bit-exact
+    np.testing.assert_array_equal(np.asarray(outs[-2]),
+                                  np.asarray(ref_last_int))
+    np.testing.assert_allclose(np.asarray(outs[-1]), np.asarray(ref_logits),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lowering_structure_kws():
+    model = KWSMLP()
+    graph, _, _ = _export(model)
+    schedule = lower_graph(graph, in_scale=IN_SCALE)
+    kinds = [type(s).__name__ for s in schedule.stages]
+    assert kinds == ["FusedThresholdStage"] * 3 + ["FloatHeadStage"]
+    assert schedule.layer_dims() == [490, 256, 256, 256, 12]
+    assert schedule.n_fused == 3
+    assert "stages" in schedule.describe()
+
+
+def test_streaming_matches_offline_and_uses_fifo_depths():
+    model = ADAutoencoder()
+    graph, _, _ = _export(model)
+    cm = compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
+    x_int = jnp.asarray(
+        np.random.default_rng(1).integers(-127, 128, (40, 128)), jnp.int32)
+    y_off = cm.offline(x_int)
+    y_str, stats = cm.streaming(x_int, micro_batch=8)
+    np.testing.assert_array_equal(np.asarray(y_off), np.asarray(y_str))
+    assert stats.n_micro == 5
+    assert len(stats.fifo_depths) == len(cm.schedule.stages) + 1
+    assert all(d >= 1 for d in stats.fifo_depths)
+    # the pipeline respected the optimizer's capacities
+    assert all(o <= d for o, d in zip(stats.max_occupancy, stats.fifo_depths))
+
+
+def test_pallas_kernel_path_matches_reference_path():
+    """use_pallas=True (interpret mode on CPU) produces the same integers."""
+    model = KWSMLP(width=32)  # small so interpret mode stays fast
+    graph, _, _ = _export(model)
+    cm_ref = compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
+    cm_pl = compile_graph(graph, in_scale=IN_SCALE, use_pallas=True,
+                          interpret=True)
+    x_int = jnp.asarray(
+        np.random.default_rng(2).integers(-127, 128, (8, 490)), jnp.int32)
+    np.testing.assert_allclose(np.asarray(cm_ref.offline(x_int)),
+                               np.asarray(cm_pl.offline(x_int)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_path_handles_unsigned_8bit_codes():
+    """Regression: inter-stage codes are unsigned in [0, 255] at 8-bit
+    activations; the kernel path must not wrap them through an int8 cast."""
+    from repro.core.streamline import streamline_dense
+    from repro.deploy.lower import FusedThresholdStage
+
+    rng = np.random.default_rng(8)
+    params = {"w": jnp.asarray(rng.standard_normal((12, 8)) * 0.2,
+                               jnp.float32),
+              "b": jnp.zeros((8,), jnp.float32)}
+    td = streamline_dense(params, weight_bits=8, act_bits=8, in_scale=0.01)
+    st = FusedThresholdStage(name="s", stage=td, in_dim=12, out_dim=8,
+                             in_scale=0.01)
+    x_int = jnp.asarray(rng.integers(0, 256, (8, 12)), jnp.int32)  # codes >127
+    np.testing.assert_array_equal(
+        np.asarray(st.apply_kernel(x_int, interpret=True)),
+        np.asarray(st.apply_ref(x_int)))
+
+
+def test_fan_out_intermediate_blocks_fusion_but_still_runs():
+    """Regression: a fused chain whose intermediate value has a second
+    consumer must not be fused away (the reader would dangle)."""
+    rng = np.random.default_rng(9)
+    w = rng.standard_normal((6, 4)).astype(np.float32)
+    g = Graph(inputs=["x"], outputs=["y2"],
+              initializers={"w": w, "b": np.zeros((4,), np.float32),
+                            "m": np.full((4,), 0.5, np.float32)})
+    from repro.core.qir import QuantSpec
+    g.nodes = [
+        Node("Dense", "d0", ["x", "w", "b"], ["h0"]),
+        Node("Relu", "r0", ["h0"], ["h1"]),
+        Node("Quant", "q0", ["h1"], ["h2"], quant=QuantSpec(bits=4)),
+        Node("Mul", "m0", ["h0", "m"], ["y2"]),   # second consumer of h0
+    ]
+    cm = compile_graph(g, in_scale=0.1, use_pallas=False)
+    assert not any(isinstance(s, FusedThresholdStage) for s in cm.schedule.stages)
+    x_int = jnp.asarray(rng.integers(-7, 8, (3, 6)), jnp.int32)
+    y = cm.offline(x_int)
+    expect = ((np.asarray(x_int, np.float32) * 0.1) @ w) * 0.5
+    np.testing.assert_allclose(np.asarray(y), expect, rtol=1e-5, atol=1e-6)
+
+
+def test_multi_threshold_sorted_equals_reference():
+    rng = np.random.default_rng(3)
+    acc = jnp.asarray(rng.integers(-10_000, 10_000, (13, 7)), jnp.int32)
+    thr = jnp.asarray(np.sort(rng.integers(-9_000, 9_000, (7, 255)), axis=1),
+                      jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(multi_threshold_sorted(acc, thr)),
+        np.asarray(multi_threshold(acc, thr)))
+    # duplicate thresholds stay exact
+    thr_dup = jnp.asarray(np.sort(rng.integers(-3, 3, (7, 31)), axis=1),
+                          jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(multi_threshold_sorted(acc, thr_dup)),
+        np.asarray(multi_threshold(acc, thr_dup)))
+
+
+def test_unsupported_graph_falls_back_to_ref_chain():
+    """A graph the matcher can't fuse still compiles and runs (float path)."""
+    w = np.random.default_rng(4).standard_normal((6, 4)).astype(np.float32)
+    g = Graph(inputs=["x"], outputs=["y"],
+              initializers={"w": w, "m": np.full((4,), 2.0, np.float32)})
+    g.nodes = [
+        Node("Dense", "d0", ["x", "w"], ["h0"]),
+        Node("Mul", "m0", ["h0", "m"], ["y"]),   # Mul breaks the fused pattern
+    ]
+    cm = compile_graph(g, in_scale=0.1, use_pallas=False)
+    assert any(isinstance(s, RefChainStage) for s in cm.schedule.stages)
+    x_int = jnp.asarray(
+        np.random.default_rng(5).integers(-7, 8, (3, 6)), jnp.int32)
+    y = cm.offline(x_int)
+    expect = (np.asarray(x_int, np.float32) * 0.1) @ w * 2.0
+    np.testing.assert_allclose(np.asarray(y), expect, rtol=1e-5, atol=1e-6)
+
+
+def test_qir_roundtrip_preserves_compiled_outputs():
+    """save -> load -> compile gives the same executor (weight_bits attrs
+    survive serialization)."""
+    model = KWSMLP(width=32)
+    graph, _, _ = _export(model)
+    graph2 = Graph.from_json(graph.to_json())
+    cm1 = compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
+    cm2 = compile_graph(graph2, in_scale=IN_SCALE, use_pallas=False)
+    x_int = jnp.asarray(
+        np.random.default_rng(6).integers(-127, 128, (4, 490)), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(cm1.offline(x_int)),
+                                  np.asarray(cm2.offline(x_int)))
+
+
+# ---------------------------------------------------------------------------
+# scenario runtime
+# ---------------------------------------------------------------------------
+
+def _tiny_compiled():
+    model = KWSMLP(width=32)
+    graph, _, _ = _export(model)
+    return compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
+
+
+def test_single_stream_and_offline_reports():
+    cm = _tiny_compiled()
+    mk = lambda i: np.random.default_rng(i).integers(
+        -127, 128, (490,)).astype(np.int32)
+    ss = single_stream(cm.offline, mk, n_queries=8, warmup=1,
+                       model_cost=KWSMLP(width=32).cost(), bits=3)
+    assert ss.scenario == "SingleStream" and ss.n_queries == 8
+    assert 0 < ss.p50_ms <= ss.p99_ms
+    assert ss.energy_proxy_uJ is not None and ss.energy_proxy_uJ > 0
+    off = offline(cm.offline, mk, n_samples=32, warmup=1)
+    assert off.throughput_qps > 0 and off.extras["batch"] == 32
+    d = off.row()
+    assert d["scenario"] == "Offline" and d["qps"] > 0
+
+
+def test_server_poisson_latency_includes_queueing():
+    cm = _tiny_compiled()
+    mk = lambda i: np.zeros((490,), np.int32)
+    rep = server_poisson(cm.offline, mk, qps=500.0, n_queries=16, warmup=1)
+    assert rep.scenario == "Server" and rep.n_queries == 16
+    assert rep.p99_ms >= rep.p50_ms > 0
+
+
+@pytest.mark.slow
+def test_run_all_scenarios_sweep():
+    cm = _tiny_compiled()
+    mk = lambda i: np.zeros((490,), np.int32)
+    reports = run_all_scenarios(cm.offline, mk, n_queries=8, n_streams=4,
+                                offline_samples=16, server_qps=500.0)
+    assert [r.scenario for r in reports] == [
+        "SingleStream", "MultiStream", "Offline", "Server"]
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant serving integration
+# ---------------------------------------------------------------------------
+
+def test_tiny_model_server_multi_tenant():
+    kws = _tiny_compiled()
+    ad_model = ADAutoencoder(width=24)
+    graph, _, _ = _export(ad_model)
+    ad = compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
+
+    server = TinyModelServer({"kws": kws, "ad": ad}, max_batch=4)
+    rng = np.random.default_rng(7)
+    for i in range(10):
+        name = "kws" if i % 2 == 0 else "ad"
+        dim = 490 if name == "kws" else 128
+        server.submit(name, rng.integers(-127, 128, (dim,)).astype(np.int32))
+    steps = server.run_until_drained()
+    assert steps >= 2          # max_batch=4 forces multiple engine steps
+    assert len(server.finished) == 10
+    st = server.stats()
+    assert st["kws"]["n"] == 5 and st["ad"]["n"] == 5
+    assert st["_aggregate"]["throughput_qps"] > 0
+    # results landed on the right requests
+    for r in server.finished:
+        assert r.result is not None
+        assert r.result.shape == ((12,) if r.model == "kws" else (128,))
+    with pytest.raises(KeyError):
+        server.submit("nope", np.zeros((4,), np.int32))
+
+
+def test_compiled_jax_model_wrapper():
+    def fwd(p, x):
+        return x @ p["w"]
+
+    p = {"w": jnp.ones((4, 2))}
+    cm = CompiledJaxModel(fwd, p, name="toy")
+    x = jnp.ones((3, 4))
+    np.testing.assert_array_equal(np.asarray(cm.offline(x)),
+                                  np.asarray(cm.reference(x)))
+    assert cm.predict(x).shape == (3,)

@@ -4,7 +4,7 @@ kernels) or to fp tolerance (attention)."""
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops
 from repro.kernels.ref import (

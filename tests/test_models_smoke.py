@@ -47,6 +47,7 @@ def test_forward_shapes_and_finite(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_one_train_step(arch):
     cfg = get_config(arch).reduced()
     model = Model(cfg)

@@ -29,6 +29,7 @@ def _run(body: str, n_dev: int = 8, timeout: int = 420):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_spmd_train_step_8dev_matches_1dev():
     """The pjit train step on a 4x2 mesh produces the same loss trajectory as
     the single-device run — SPMD correctness of the whole stack."""
@@ -131,6 +132,7 @@ def test_compressed_allreduce_8dev():
     """)
 
 
+@pytest.mark.slow
 def test_elastic_mesh_shrink_and_restore():
     """Simulated node failure: train on 8 devices, checkpoint, rebuild a
     6-device mesh from 'surviving' devices, restore, keep training."""

@@ -6,7 +6,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.qlayers import QDense, QDenseBatchNorm
 from repro.core.quantizers import IntQuantizer

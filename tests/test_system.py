@@ -25,6 +25,7 @@ def _auc(scores, labels):
     return (ranks[pos].sum() - n_pos * (n_pos - 1) / 2) / (n_pos * n_neg)
 
 
+@pytest.mark.slow
 def test_ad_workflow_end_to_end():
     """AD task: QAT-train the autoencoder on normal windows, then anomaly
     scores must separate planted anomalies (AUC well above chance) — the
@@ -52,6 +53,7 @@ def test_ad_workflow_end_to_end():
     assert auc > 0.8, auc
 
 
+@pytest.mark.slow
 def test_kws_workflow_with_streamlined_deployment():
     """KWS task: QAT-train a small same-structure MLP, streamline to integer
     thresholds, and check the integer deployment predicts the same classes
