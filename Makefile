@@ -1,4 +1,4 @@
-.PHONY: test test-fast bench bench-table6 example
+.PHONY: test test-fast bench bench-table6 bench-scenarios example
 
 test:            ## full tier-1 suite
 	./scripts/test.sh
@@ -11,6 +11,9 @@ bench:           ## every benchmark section
 
 bench-table6:    ## MLPerf-Tiny scenario sweep over compiled deployments
 	PYTHONPATH=src python -m benchmarks.run --only table6
+
+bench-scenarios: ## scenario sweep, standalone (REPRO_FAST=1 for a quick pass)
+	PYTHONPATH=src:. REPRO_FAST=$(REPRO_FAST) python benchmarks/table6_scenarios.py
 
 example:         ## the end-to-end codesign + compiled-deployment example
 	PYTHONPATH=src python examples/mlperf_tiny_codesign.py

@@ -3,23 +3,32 @@
 The paper reports single-inference latency/energy (Table 5). MLPerf Tiny
 actually scores submissions under LoadGen scenarios; this section runs the
 full sweep — SingleStream / MultiStream / Offline / Server — for all four
-Table-1 models through ``repro.deploy``:
+Table-1 models through ``repro.deploy``, every one of them on the real
+compiler path:
 
-  * KWS + AD lower through the real compiler path:
-      QAT export -> QIR json -> streamline/fuse -> jit stage schedule,
-    and their Offline rows compare the compiled executor against the unfused
-    per-node QIR interpreter (the "no compiler" baseline it must beat).
-  * IC + CNV (conv nets, no QIR export yet) deploy as whole-forward jit
-    programs with the same scenario harness, so every Table-1 row is load-
-    tested under one format.
+  * KWS + AD:   QAT export -> QIR json -> streamline/fuse -> jit schedule
+    (``export_qmlp``), all-dense fused threshold stages.
+  * IC + CNV:   ``export_qcnn`` -> im2col fused conv threshold stages (with
+    calibrated po2 activation scales for IC and FINN-style bipolar sign
+    banks for the binary CNV) + integer MaxPool / Flatten stages.
 
-Also prints the FIFO-sized streaming schedule for KWS (the §3.1.2 depths
-feeding a real execution) and a multi-tenant section where all four models
-share one ``TinyModelServer`` queue.
+Every Offline row compares the compiled executor against the unfused
+per-node QIR interpreter (the "no compiler" baseline it must beat), checks
+compiled-vs-unfused argmax parity, and carries a per-stage latency
+breakdown (``stage_ms``) so conv-vs-dense stage costs are visible. The
+energy proxy for compiled models comes from ``core.bops.schedule_cost`` —
+Eq. 1 BOPs per lowered stage, conv stages included.
+
+Also prints the FIFO-sized streaming schedule for KWS and CNV (the §3.1.2
+depths feeding a real execution) and a multi-tenant section where all four
+models share one ``TinyModelServer`` queue.
+
+Set REPRO_FAST=1 for a reduced-size pass (CI / smoke).
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -27,33 +36,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import banner, print_rows, row
-from repro.core.qir import export_qmlp
-from repro.deploy import CompiledJaxModel, compile_graph
+from repro.core.bops import schedule_cost
+from repro.core.qir import export_qcnn, export_qmlp
+from repro.deploy import compile_graph
 from repro.deploy.scenarios import offline, single_stream
 from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
 from repro.serving.engine import TinyModelServer
 
 IN_SCALE = 1.0 / 127.0
+FAST = os.environ.get("REPRO_FAST", "0") not in ("0", "")
 
 
 def _compile_mlp(model, key):
     params = model.init(key)
     hidden_defs, _ = model.layers()
     graph = export_qmlp(hidden_defs, params["hidden"], params["head"],
-                        meta={"model": type(model).__name__})
+                        meta={"model": type(model).__name__},
+                        freeze_scales=True, in_scale=IN_SCALE)
     return compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
 
 
-def _compile_conv(model, key, x_example):
+def _compile_conv(model, key, rng):
     params = model.init(key)
-
-    def fwd(p, x):
-        out = model.apply(p, x, train=False)
-        return out[0] if isinstance(out, tuple) else out
-
-    cm = CompiledJaxModel(fwd, params, name=type(model).__name__)
-    jax.block_until_ready(cm.offline(x_example))  # build the program
-    return cm
+    cal = rng.integers(-127, 128, (8, model.in_hw, model.in_hw,
+                                   model.in_ch)).astype(np.int32)
+    graph = export_qcnn(model, params, calibrate=cal)
+    return compile_graph(graph, in_scale=graph.meta["in_scale"],
+                         use_pallas=False)
 
 
 def _time_offline(fn, xb, iters: int = 3) -> float:
@@ -73,37 +82,42 @@ def run():
     key = jax.random.PRNGKey(0)
     rng = np.random.default_rng(0)
 
-    entries = {}  # name -> (compiled, make_query, model_cost, bits, ref_fn)
+    entries = {}  # name -> (compiled, make_query, bits)
 
     kws, ad = KWSMLP(), ADAutoencoder()
     for name, model, dim, bits in (("KWS-FINN", kws, 490, 3),
                                    ("AD-hls4ml", ad, 128, 8)):
         cm = _compile_mlp(model, key)
         mk = (lambda d: lambda i: rng.integers(-127, 128, (d,)).astype(np.int32))(dim)
-        entries[name] = (cm, mk, model.cost(), bits, cm.reference)
+        entries[name] = (cm, mk, bits)
 
     ic, cnv = ICModel(), CNVModel()
-    x_img = jnp.ones((1, 32, 32, 3))
     for name, model, bits in (("IC-hls4ml", ic, 8), ("IC-FINN-CNV", cnv, 1)):
-        cm = _compile_conv(model, key, x_img)
-        mk = lambda i: rng.standard_normal((32, 32, 3)).astype(np.float32)
-        entries[name] = (cm, mk, model.cost(), bits, cm.reference)
+        cm = _compile_conv(model, key, rng)
+        hw, ch = model.in_hw, model.in_ch
+        mk = (lambda h, c: lambda i: rng.integers(
+            -127, 128, (h, h, c)).astype(np.int32))(hw, ch)
+        entries[name] = (cm, mk, bits)
 
     rows = []
-    for name, (cm, mk, cost, bits, ref_fn) in entries.items():
-        conv = isinstance(cm, CompiledJaxModel)
-        n_off = 64 if conv else 256
+    for name, (cm, mk, bits) in entries.items():
+        conv = cm.schedule.n_fused_conv > 0
+        cost = schedule_cost(cm.schedule.stages)
+        n_off = (16 if conv else 64) if FAST else (48 if conv else 256)
+        n_ss = (8 if conv else 16) if FAST else (16 if conv else 48)
 
-        ss = single_stream(cm.offline, mk, n_queries=16 if conv else 48,
+        ss = single_stream(cm.offline, mk, n_queries=n_ss,
                            model_cost=cost, bits=bits)
         off = offline(cm.offline, mk, n_samples=n_off,
-                      model_cost=cost, bits=bits)
+                      model_cost=cost, bits=bits, compiled=cm)
 
-        # unfused per-layer baseline on the same Offline pool
-        xb = np.stack([mk(i) for i in range(n_off)])
-        if not conv:
-            xb = jnp.asarray(xb, jnp.int32)
-        ref_qps = _time_offline(ref_fn, np.asarray(xb) if conv else xb, iters=1)
+        # unfused per-node baseline + parity on the same Offline pool
+        n_ref = min(n_off, 8 if conv else n_off)   # eager conv is slow
+        xb = jnp.asarray(np.stack([mk(i) for i in range(n_ref)]), jnp.int32)
+        ref_qps = _time_offline(cm.reference, xb, iters=1)
+        y_c = np.asarray(cm.offline(xb))
+        y_r = np.asarray(cm.reference(xb))
+        parity = float((np.argmax(y_c, -1) == np.argmax(y_r, -1)).mean())
         speedup = off.throughput_qps / max(ref_qps, 1e-9)
 
         rows.append(row(
@@ -115,23 +129,32 @@ def run():
             compiled_qps=f"{off.throughput_qps:.0f}",
             unfused_ref_qps=f"{ref_qps:.0f}",
             compiled_speedup=f"{speedup:.1f}x",
+            fused_stages=cm.schedule.n_fused,
+            fused_conv=cm.schedule.n_fused_conv,
+            argmax_parity=parity,
             beats_reference=speedup > 1.0))
+        if off.stage_ms:
+            top = sorted(off.stage_ms, key=lambda s: -s["ms"])[:3]
+            print(f"stage_ms[{name}]: " + " ".join(
+                f"{s['stage']}={s['ms']:.3f}ms" for s in top))
     print_rows(rows)
 
-    # -- streaming mode: the FIFO pass feeding a real schedule -------------
-    cm, mk, _, _, _ = entries["KWS-FINN"]
-    xb = jnp.asarray(np.stack([mk(i) for i in range(64)]), jnp.int32)
-    y_off = cm.offline(xb)
-    y_str, stats = cm.streaming(xb, micro_batch=8)
-    print(f"streaming[KWS]: fifo_depths={stats.fifo_depths} "
-          f"max_occupancy={stats.max_occupancy} "
-          f"sim_cycles={stats.sim_cycles} "
-          f"matches_offline={bool(jnp.all(y_off == y_str))}")
+    # -- streaming mode: the FIFO pass feeding real schedules --------------
+    for name, micro in (("KWS-FINN", 8), ("IC-FINN-CNV", 4)):
+        cm, mk, _ = entries[name]
+        n = 16 if FAST else 32
+        xb = jnp.asarray(np.stack([mk(i) for i in range(n)]), jnp.int32)
+        y_off = cm.offline(xb)
+        y_str, stats = cm.streaming(xb, micro_batch=micro)
+        print(f"streaming[{name}]: fifo_depths={stats.fifo_depths} "
+              f"max_occupancy={stats.max_occupancy} "
+              f"sim_cycles={stats.sim_cycles} "
+              f"matches_offline={bool(jnp.all(y_off == y_str))}")
 
     # -- multi-tenant: all four models behind one queue --------------------
     server = TinyModelServer({n: e[0] for n, e in entries.items()},
                              max_batch=16)
-    for i in range(96):
+    for i in range(32 if FAST else 96):
         name = list(entries)[i % len(entries)]
         server.submit(name, entries[name][1](i))
     server.run_until_drained()

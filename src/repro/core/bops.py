@@ -109,6 +109,41 @@ class ModelCost:
 
 
 # ---------------------------------------------------------------------------
+# compiled-schedule costing (deploy.lower stage lists)
+# ---------------------------------------------------------------------------
+
+def stage_cost(stage) -> LayerCost:
+    """Eq. 1/2 cost of one lowered deploy stage, by duck type.
+
+    Works on any ``deploy.lower`` stage: conv stages carry a ``geom``
+    (kernel/out-tile geometry -> conv_bops), matmul-like stages carry
+    in_dim/out_dim, and data-movement stages (pool/flatten) cost zero BOPs.
+    ``in_bits``/``stage.weight_bits`` feed Eq. 1's b_a/b_w, so the energy
+    proxy of a compiled conv schedule is precision-aware end to end.
+    """
+    name = getattr(stage, "name", type(stage).__name__)
+    b_a = int(getattr(stage, "in_bits", 8))
+    bank = getattr(stage, "stage", None)        # ThresholdDense, if fused
+    b_w = int(getattr(bank, "weight_bits", 8))
+    geom = getattr(stage, "geom", None)
+    if geom is not None:                        # FusedConvThresholdStage
+        return conv_cost(name, geom.in_ch, geom.out_ch, geom.kernel,
+                         geom.out_h, geom.out_w, b_a, b_w, bias=False)
+    w = getattr(stage, "w", None)               # FloatHeadStage
+    if bank is not None or w is not None:
+        return dense_cost(name, int(stage.in_dim), int(stage.out_dim),
+                          b_a, b_w, bias=w is not None)
+    # pool / flatten / fallback chains: no MACs, just movement
+    return LayerCost(name=name, bops=0.0, wm_bits=0, flops=0.0, n_params=0)
+
+
+def schedule_cost(stages: Iterable) -> ModelCost:
+    """ModelCost of a compiled ``StageSchedule.stages`` list — the energy
+    proxy the MLPerf-Tiny scenario runtime attaches to conv deployments."""
+    return ModelCost([stage_cost(s) for s in stages])
+
+
+# ---------------------------------------------------------------------------
 # LM-scale model FLOPs (used by launch/roofline.py)
 # ---------------------------------------------------------------------------
 

@@ -8,8 +8,20 @@ JSON graph so the training flow (core/qlayers) and the deployment flow
 
   train (QAT)  --export-->  QIR json  --import-->  streamline/deploy
 
-Supported ops: Dense, Conv2D, BatchNorm, Relu, Quant, MultiThreshold, TopK.
-Weights live in ``initializers`` (name -> ndarray, stored base64 in JSON).
+Supported ops: Dense, Conv2D, MaxPool, Flatten, BatchNorm, Relu, Quant,
+MultiThreshold, TopK, Mul. Weights live in ``initializers`` (name -> ndarray,
+stored base64 in JSON).
+
+Quant node semantics (attrs select the flavor):
+  * default             — dynamic min-max IntQuantizer (the QAT fake-quant)
+  * ``attrs["scale"]``  — fixed-grid unsigned quant with half-up rounding,
+    value = clip(floor(x/s + 0.5), 0, 2^bits - 1) * s. This is the form the
+    conv exporter emits: the scale is frozen at export so the deployed
+    integer thresholds (core/streamline.py) reproduce it bit-exactly.
+  * ``attrs["bipolar"]``— FINN's bipolar activation in unipolar encoding:
+    value = [x >= 0] in {0, 1} standing for sign(x) in {-1, +1}. Layers
+    consuming it carry export-folded weights (w' = 2w, b' = b - sum(w)) so
+    the graph stays affine in the 0/1 codes.
 """
 
 from __future__ import annotations
@@ -137,6 +149,7 @@ def eval_node(node: Node, x: List):
     Traceable — the deploy fallback stage calls this inside jit; Graph.run
     wraps it eagerly per node.
     """
+    import jax
     import jax.numpy as jnp
 
     from repro.core.quantizers import IntQuantizer
@@ -146,6 +159,26 @@ def eval_node(node: Node, x: List):
         y = x[0] @ x[1]
         if len(x) > 2:
             y = y + x[2]
+    elif node.op == "Conv2D":
+        stride = int(node.attrs.get("stride", 1))
+        y = jax.lax.conv_general_dilated(
+            x[0], x[1],
+            window_strides=(stride, stride),
+            padding=node.attrs.get("padding", "SAME"),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        if len(x) > 2:
+            y = y + x[2]
+    elif node.op == "MaxPool":
+        win = int(node.attrs.get("window", 2))
+        stride = int(node.attrs.get("stride", win))
+        init = (jnp.iinfo(x[0].dtype).min
+                if jnp.issubdtype(x[0].dtype, jnp.integer) else -jnp.inf)
+        y = jax.lax.reduce_window(
+            x[0], init, jax.lax.max, (1, win, win, 1), (1, stride, stride, 1),
+            node.attrs.get("padding", "VALID"))
+    elif node.op == "Flatten":
+        y = x[0].reshape(x[0].shape[0], -1)
     elif node.op == "Relu":
         y = jnp.maximum(x[0], 0)
     elif node.op == "BatchNorm":
@@ -153,12 +186,20 @@ def eval_node(node: Node, x: List):
         eps = node.attrs.get("eps", 1e-3)
         y = gamma * (xx - mu) / jnp.sqrt(var + eps) + beta
     elif node.op == "Quant":
-        q = IntQuantizer(
-            bits=node.quant.bits,
-            signed=node.quant.signed,
-            narrow=node.quant.narrow,
-        )
-        y = q(x[0])
+        if node.attrs.get("bipolar"):
+            # unipolar encoding of the bipolar sign activation: [x >= 0]
+            y = (x[0] >= 0).astype(jnp.float32)
+        elif node.attrs.get("scale") is not None:
+            s = float(node.attrs["scale"])
+            qmax = 2 ** node.quant.bits - 1
+            y = jnp.clip(jnp.floor(x[0] / s + 0.5), 0, qmax) * s
+        else:
+            q = IntQuantizer(
+                bits=node.quant.bits,
+                signed=node.quant.signed,
+                narrow=node.quant.narrow,
+            )
+            y = q(x[0])
     elif node.op == "MultiThreshold":
         y = multi_threshold(x[0].astype(jnp.int32), jnp.asarray(x[1]))
     elif node.op == "TopK":
@@ -174,10 +215,23 @@ def eval_node(node: Node, x: List):
 # exporters
 # ---------------------------------------------------------------------------
 
-def export_qmlp(layer_defs, params_list, head_params, meta=None) -> Graph:
-    """Export a QDense/QDenseBatchNorm stack + linear head to QIR."""
+def export_qmlp(layer_defs, params_list, head_params, meta=None,
+                freeze_scales: bool = False,
+                in_scale: float = 1.0 / 127.0,
+                bn_eps: float = 1e-3) -> Graph:
+    """Export a QDense/QDenseBatchNorm stack + linear head to QIR.
+
+    With ``freeze_scales`` the activation Quant nodes carry the po2 scale
+    the streamliner would pick (chained from ``in_scale``), so the unfused
+    ``Graph.run`` reference uses the same half-up deployment grid as the
+    compiled integer schedule instead of dynamic min-max fake-quant — the
+    compiled-vs-unfused parity then holds at the decision level. ``bn_eps``
+    must match the value later passed to ``lower_graph`` so the BN fold
+    behind the frozen scales stays in lockstep with the deployed thresholds.
+    """
     g = Graph(inputs=["x"], outputs=["logits"], meta=meta or {})
     prev = "x"
+    scale = in_scale
     for i, (ld, p) in enumerate(zip(layer_defs, params_list)):
         wname, bname = f"w{i}", f"b{i}"
         g.initializers[wname] = np.asarray(p["w"])
@@ -210,17 +264,203 @@ def export_qmlp(layer_defs, params_list, head_params, meta=None) -> Graph:
         g.nodes.append(Node("Relu", f"relu{i}", [prev], [out]))
         prev = out
         out = f"h{i}_q"
+        attrs = {}
+        if freeze_scales:
+            from repro.core.streamline import _fold_affine, choose_act_scale
+
+            import jax.numpy as jnp
+
+            k_f, b_f = _fold_affine(
+                {k: jnp.asarray(v) for k, v in p.items()}, bn_eps)
+            s_out = choose_act_scale(k_f, b_f, in_scale=scale,
+                                     act_bits=ld.act_bits)
+            attrs["scale"] = s_out
+            scale = s_out
         g.nodes.append(
             Node(
                 "Quant",
                 f"quant{i}",
                 [prev],
                 [out],
-                quant=QuantSpec(bits=ld.act_bits, signed=True),
+                attrs=attrs,
+                quant=QuantSpec(bits=ld.act_bits,
+                                signed=not freeze_scales),
             )
         )
         prev = out
     g.initializers["w_head"] = np.asarray(head_params["w"])
     g.initializers["b_head"] = np.asarray(head_params["b"])
     g.nodes.append(Node("Dense", "head", [prev, "w_head", "b_head"], ["logits"]))
+    return g
+
+
+def _conv_out_hw(h: int, w: int, k: int, stride: int, padding: str):
+    if padding == "SAME":
+        return -(-h // stride), -(-w // stride)
+    return (h - k) // stride + 1, (w - k) // stride + 1
+
+
+def export_qcnn(model, params, in_scale: float = 1.0 / 128.0, meta=None,
+                calibrate=None) -> Graph:
+    """Export a Table-1 conv model (``ICModel`` or ``CNVModel``) to QIR.
+
+    Mirrors ``export_qmlp`` for the spatial models: every conv layer becomes a
+    ``Conv2D -> [Relu] -> Quant`` chain with per-layer ``QuantSpec``s, plus
+    ``MaxPool``/``Flatten`` nodes where the architecture has them. Two export
+    decisions make the graph *exactly* streamlinable (the lowered integer
+    schedule reproduces ``Graph.run`` bit for bit, ties included):
+
+      * weights are stored fake-quantized with power-of-two per-channel
+        scales (recorded via ``attrs["w_scale"]``) and biases snapped to the
+        integer-accumulator grid, so with a po2 ``in_scale`` every float in
+        the reference interpreter is an exact multiple of a po2 step;
+      * the binary CNV is exported in FINN's unipolar form: activations are
+        ``[x >= 0]`` codes in {0, 1} and downstream weights are folded as
+        ``w' = 2w, b' = b - sum(w)`` so arithmetic stays affine in the codes
+        (its ``meta["in_scale"]`` is 1.0 — input codes are the values).
+
+    ``in_scale`` is the float value of one step of the 8-bit input image
+    (ignored for CNV); keep it a power of two for the exactness guarantee.
+    ``calibrate`` (optional, multi-bit models) is a batch of integer input
+    codes used to measure real post-ReLU activation ranges; without it the
+    per-layer scales come from the worst-case reach bound, which wastes most
+    of the code range and costs accuracy (post-training static calibration
+    is what the hls4ml flow does with its profiling pass).
+    """
+    if getattr(model, "weight_bits", 8) == 1 and hasattr(model, "channels"):
+        return _export_cnv(model, params, meta)
+    if hasattr(model, "conv_layers"):
+        return _export_ic(model, params, in_scale, meta, calibrate)
+    raise TypeError(f"no QIR conv exporter for {type(model).__name__}")
+
+
+def _export_ic(model, params, in_scale: float, meta, calibrate=None) -> Graph:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.quantizers import IntQuantizer, quantize_po2
+    from repro.core.streamline import choose_act_scale
+
+    g = Graph(inputs=["x"], outputs=["logits"],
+              meta=dict(meta or {}, model=type(model).__name__,
+                        in_scale=in_scale))
+    convs = model.conv_layers()
+    h, w, cin = model.in_hw, model.in_hw, model.in_ch
+    scale, in_qmax = in_scale, 127          # signed 8-bit input codes
+    hcal = (None if calibrate is None
+            else jnp.asarray(calibrate, jnp.float32) * in_scale)
+    prev = "x"
+    for i, (ld, p) in enumerate(zip(convs, params["convs"])):
+        wk = np.asarray(p["w"], np.float32)             # (k, k, cin, f)
+        wq = IntQuantizer(bits=ld.weight_bits, signed=True, narrow=True,
+                          axis=0, po2=True)
+        w_int, s_w = wq.quantize_int(jnp.asarray(wk.reshape(-1, ld.out_ch)))
+        s_w = np.asarray(s_w, np.float32).reshape(-1)   # (f,) po2
+        w_hat = (np.asarray(w_int, np.float32) * s_w).reshape(wk.shape)
+        grid = s_w * scale                              # accumulator step
+        b_q = np.asarray(np.round(np.asarray(p["b"]) / grid) * grid,
+                         np.float32)
+        oh, ow = _conv_out_hw(h, w, ld.kernel, ld.stride, ld.padding)
+        g.initializers[f"cw{i}"] = w_hat
+        g.initializers[f"cb{i}"] = b_q
+        g.initializers[f"cws{i}"] = s_w
+        g.nodes.append(Node(
+            "Conv2D", f"conv{i}", [prev, f"cw{i}", f"cb{i}"], [f"c{i}_conv"],
+            attrs={"kernel": ld.kernel, "stride": ld.stride,
+                   "padding": ld.padding, "weight_bits": ld.weight_bits,
+                   "w_scale": f"cws{i}",
+                   "in_shape": [h, w, cin], "out_shape": [oh, ow, ld.out_ch]}))
+        g.nodes.append(Node("Relu", f"relu{i}", [f"c{i}_conv"], [f"c{i}_relu"]))
+        qmax_out = 2 ** ld.act_bits - 1
+        if hcal is not None:
+            y = jax.lax.conv_general_dilated(
+                hcal, jnp.asarray(w_hat), (ld.stride, ld.stride), ld.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + jnp.asarray(b_q)
+            r = jnp.maximum(y, 0)
+            s_out = float(quantize_po2(
+                jnp.maximum(jnp.max(r), 1e-8) / qmax_out))
+            hcal = jnp.clip(jnp.floor(r / s_out + 0.5), 0, qmax_out) * s_out
+        else:
+            s_out = choose_act_scale(
+                jnp.asarray(w_hat.reshape(-1, ld.out_ch)), jnp.asarray(b_q),
+                in_scale=scale, act_bits=ld.act_bits, in_qmax=in_qmax)
+        g.nodes.append(Node(
+            "Quant", f"quant{i}", [f"c{i}_relu"], [f"c{i}_q"],
+            attrs={"scale": s_out},
+            quant=QuantSpec(bits=ld.act_bits, signed=False)))
+        prev = f"c{i}_q"
+        scale, in_qmax = s_out, 2 ** ld.act_bits - 1
+        h, w, cin = oh, ow, ld.out_ch
+    g.nodes.append(Node("Flatten", "flatten", [prev], ["flat"],
+                        attrs={"in_shape": [h, w, cin]}))
+    wq_head = IntQuantizer(bits=model.weight_bits, axis=0)
+    g.initializers["w_head"] = np.asarray(
+        wq_head(jnp.asarray(params["head"]["w"])), np.float32)
+    g.initializers["b_head"] = np.asarray(params["head"]["b"], np.float32)
+    g.nodes.append(Node("Dense", "head", ["flat", "w_head", "b_head"],
+                        ["logits"]))
+    return g
+
+
+def _export_cnv(model, params, meta) -> Graph:
+    g = Graph(inputs=["x"], outputs=["logits"],
+              meta=dict(meta or {}, model=type(model).__name__,
+                        in_scale=1.0))
+    convs = model.conv_layers()
+    h, w, cin = model.in_hw, model.in_hw, model.in_ch
+    prev = "x"
+    for i, (ld, p) in enumerate(zip(convs, params["convs"])):
+        sgn = np.where(np.asarray(p["w"]) >= 0, 1.0, -1.0).astype(np.float32)
+        if i == 0:
+            wk, b_q = sgn, None       # signed input codes: plain +-1 taps
+        else:
+            wk = 2.0 * sgn            # unipolar folding: x = 2q - 1
+            b_q = -np.sum(sgn, axis=(0, 1, 2)).astype(np.float32)
+        oh, ow = _conv_out_hw(h, w, ld.kernel, ld.stride, ld.padding)
+        g.initializers[f"cw{i}"] = wk
+        g.initializers[f"cws{i}"] = np.ones((ld.out_ch,), np.float32)
+        ins = [prev, f"cw{i}"]
+        if b_q is not None:
+            g.initializers[f"cb{i}"] = b_q
+            ins.append(f"cb{i}")
+        g.nodes.append(Node(
+            "Conv2D", f"conv{i}", ins, [f"c{i}_conv"],
+            attrs={"kernel": ld.kernel, "stride": ld.stride,
+                   "padding": ld.padding, "weight_bits": 1,
+                   "w_scale": f"cws{i}",
+                   "in_shape": [h, w, cin], "out_shape": [oh, ow, ld.out_ch]}))
+        g.nodes.append(Node("Quant", f"sign{i}", [f"c{i}_conv"], [f"c{i}_q"],
+                            attrs={"bipolar": True},
+                            quant=QuantSpec(bits=1, signed=False)))
+        prev = f"c{i}_q"
+        h, w, cin = oh, ow, ld.out_ch
+        if i in model.pool_after:
+            g.nodes.append(Node(
+                "MaxPool", f"pool{i}", [prev], [f"p{i}"],
+                attrs={"window": 2, "stride": 2, "padding": "VALID",
+                       "in_shape": [h, w, cin],
+                       "out_shape": [h // 2, w // 2, cin]}))
+            prev = f"p{i}"
+            h, w = h // 2, w // 2
+    g.nodes.append(Node("Flatten", "flatten", [prev], ["flat"],
+                        attrs={"in_shape": [h, w, cin]}))
+    prev = "flat"
+    dims = [h * w * cin, *model.fc, model.n_classes]
+    for j, p in enumerate(params["fcs"]):
+        sgn = np.where(np.asarray(p["w"]) >= 0, 1.0, -1.0).astype(np.float32)
+        g.initializers[f"fw{j}"] = 2.0 * sgn
+        g.initializers[f"fb{j}"] = -np.sum(sgn, axis=0).astype(np.float32)
+        last = j == len(params["fcs"]) - 1
+        out = "logits" if last else f"f{j}_fc"
+        attrs = {"weight_bits": 1}
+        if not last:
+            g.initializers[f"fws{j}"] = np.ones((dims[j + 1],), np.float32)
+            attrs["w_scale"] = f"fws{j}"
+        g.nodes.append(Node("Dense", f"fc{j}", [prev, f"fw{j}", f"fb{j}"],
+                            [out], attrs=attrs))
+        if not last:
+            g.nodes.append(Node("Quant", f"fsign{j}", [out], [f"f{j}_q"],
+                                attrs={"bipolar": True},
+                                quant=QuantSpec(bits=1, signed=False)))
+            prev = f"f{j}_q"
     return g

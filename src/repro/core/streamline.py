@@ -41,16 +41,18 @@ def quant_act_ref(y, s_out: float, qmax: int):
 
 @dataclasses.dataclass
 class ThresholdDense:
-    """A streamlined (deployment-form) dense stage.
+    """A streamlined (deployment-form) matmul stage.
 
     y_int = multi_threshold(x_int @ w_int, thresholds)  in [0, 2^act_bits - 1]
-    float value of the output = y_int * out_scale.
+    float value of the output = y_int * out_scale. Convolutions lower to the
+    same form with w_int holding the (kh*kw*cin, cout) im2col matrix.
     """
 
     w_int: jnp.ndarray        # (in, out) int8 codes
     thresholds: jnp.ndarray   # (out, n_steps) int32, sorted along steps
     out_scale: float          # po2 scalar
     act_bits: int
+    weight_bits: int = 8      # for the BOPs stage costing (core/bops.py)
 
     @property
     def n_steps(self) -> int:
@@ -76,6 +78,9 @@ def multi_threshold_sorted(acc, thresholds):
     runs on CPU, where the O(S) broadcast compare dominates at 8-bit
     activations (S = 255).
     """
+    if thresholds.shape[1] == 1:
+        # single-step banks (1-bit / bipolar sign): one broadcast compare
+        return (acc >= thresholds[..., 0]).astype(jnp.int32)
     find = jax.vmap(
         lambda t, a: jnp.searchsorted(t, a, side="right"),
         in_axes=(0, -1), out_axes=-1,
@@ -92,6 +97,74 @@ def _fold_affine(params, eps: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return params["w"], params["b"]
 
 
+def choose_act_scale(k2d, b, *, in_scale: float, act_bits: int,
+                     in_qmax: Optional[int] = None) -> float:
+    """Pick the po2 activation scale covering one stage's pre-act range.
+
+    Heuristic reach: |acc| <= in_qmax * sum|w| per output channel, plus the
+    bias. ``in_qmax`` is the largest input code (127 for signed 8-bit input
+    images, 2^bits - 1 for the unsigned inter-stage codes); the historical
+    default (2^(act_bits-1) - 1) matches the original dense streamliner.
+    """
+    qmax_out = 2 ** act_bits - 1
+    if in_qmax is None:
+        in_qmax = 2 ** (act_bits - 1) - 1  # inputs assumed same grid width
+    reach = jnp.max(jnp.sum(jnp.abs(k2d), axis=0) * in_scale * in_qmax
+                    + jnp.abs(b))
+    return float(quantize_po2(jnp.maximum(reach, 1e-8) / qmax_out))
+
+
+def make_threshold_stage(
+    w_int,
+    s_w,
+    b,
+    *,
+    in_scale: float,
+    act_bits: int,
+    s_out: Optional[float] = None,
+    bipolar: bool = False,
+    weight_bits: int = 8,
+    in_qmax: Optional[int] = None,
+) -> ThresholdDense:
+    """Build the integer threshold bank for one already-quantized stage.
+
+    ``w_int`` (in, out) integer weight codes with per-output-channel scale
+    ``s_w``; float pre-activation for channel c is
+
+        y = acc * (s_w[c] * in_scale) + b[c].
+
+    Two activation flavors:
+      * half-up unsigned quant (requires a preceding ReLU): boundary i is
+        y >= (i - 0.5) * s_out  =>  acc >= ceil(((i-0.5)*s_out - b) / denom)
+      * ``bipolar`` — FINN's sign activation in unipolar encoding: a single
+        threshold at y >= 0, output codes {0, 1} with out_scale 1 (the next
+        layer's weights are export-folded to consume the codes directly).
+    """
+    s_w = jnp.reshape(jnp.asarray(s_w, jnp.float32), (-1,))      # (out,)
+    b = jnp.reshape(jnp.asarray(b, jnp.float32), (-1,))
+    denom = s_w * in_scale                                       # (out,) > 0
+    if bipolar:
+        t_float = (0.0 - b[:, None]) / denom[:, None]            # (out, 1)
+        out_scale, act_bits = 1.0, 1
+    else:
+        if s_out is None:
+            s_out = choose_act_scale(
+                jnp.abs(w_int.astype(jnp.float32)) * s_w[None, :], b,
+                in_scale=in_scale, act_bits=act_bits, in_qmax=in_qmax)
+        qmax_out = 2 ** act_bits - 1
+        steps = jnp.arange(1, qmax_out + 1, dtype=jnp.float32)   # (S,)
+        bound = (steps[None, :] - 0.5) * s_out                   # (1, S)
+        t_float = (bound - b[:, None]) / denom[:, None]          # (out, S)
+        out_scale = float(s_out)
+    return ThresholdDense(
+        w_int=w_int.astype(jnp.int8),
+        thresholds=jnp.ceil(t_float).astype(jnp.int32),
+        out_scale=out_scale,
+        act_bits=act_bits,
+        weight_bits=weight_bits,
+    )
+
+
 def streamline_dense(
     params,
     *,
@@ -100,12 +173,16 @@ def streamline_dense(
     in_scale: float,
     bn_eps: float = 1e-3,
     relu: bool = True,
+    s_out: Optional[float] = None,
+    in_qmax: Optional[int] = None,
 ) -> ThresholdDense:
     """Convert one (QDense[BatchNorm] + ReLU + act-quant) stage to thresholds.
 
     ``in_scale`` is the float value of one input integer step (the previous
     stage's out_scale, or the input quant scale for the first layer).
     """
+    if not relu:
+        raise NotImplementedError("streamlining currently targets ReLU stages")
     k_folded, b_folded = _fold_affine(params, bn_eps)
 
     # --- integer weights, per-output-channel symmetric scale -------------
@@ -113,31 +190,51 @@ def streamline_dense(
     w_int, s_w = wq.quantize_int(k_folded)          # s_w: (1, out)
     s_w = jnp.squeeze(s_w, axis=0)                  # (out,)
 
-    # --- choose a po2 output scale covering the pre-activation range -----
-    # heuristic range: |acc| <= in_qmax * sum|w|; cover the relu output range
-    qmax_out = 2 ** act_bits - 1
-    in_qmax = 2 ** (act_bits - 1) - 1  # inputs assumed same grid width
-    reach = jnp.max(jnp.sum(jnp.abs(k_folded), axis=0) * in_scale * in_qmax + jnp.abs(b_folded))
-    s_out = float(quantize_po2(jnp.maximum(reach, 1e-8) / qmax_out))
+    if s_out is None:
+        s_out = choose_act_scale(k_folded, b_folded, in_scale=in_scale,
+                                 act_bits=act_bits, in_qmax=in_qmax)
+    return make_threshold_stage(
+        w_int, s_w, b_folded, in_scale=in_scale, act_bits=act_bits,
+        s_out=s_out, weight_bits=weight_bits)
 
-    # --- thresholds on the integer accumulator ---------------------------
-    # float preact for channel c:  y = acc * (s_w[c] * in_scale) + b_folded[c]
-    # quant boundary i (half-up):  y >= (i - 0.5) * s_out
-    #  => acc >= ((i - 0.5) * s_out - b[c]) / (s_w[c] * in_scale)
-    steps = jnp.arange(1, qmax_out + 1, dtype=jnp.float32)      # (S,)
-    denom = s_w * in_scale                                      # (out,) > 0
-    bound = (steps[None, :] - 0.5) * s_out                      # (1, S)
-    t_float = (bound - b_folded[:, None]) / denom[:, None]      # (out, S)
-    thresholds = jnp.ceil(t_float).astype(jnp.int32)
-    if not relu:
-        raise NotImplementedError("streamlining currently targets ReLU stages")
 
-    return ThresholdDense(
-        w_int=w_int.astype(jnp.int8),
-        thresholds=thresholds,
-        out_scale=s_out,
-        act_bits=act_bits,
-    )
+def _fold_affine_conv(params, eps: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-channel BN fold for a (kh, kw, cin, cout) conv kernel."""
+    if "gamma" in params:
+        v = params["gamma"] / jnp.sqrt(params["sigma2"] + eps)
+        k = params["w"] * v[None, None, None, :]
+        return k, v * (params["b"] - params["mu"]) + params["beta"]
+    return params["w"], params["b"]
+
+
+def streamline_conv(
+    params,
+    *,
+    weight_bits: int,
+    act_bits: int,
+    in_scale: float,
+    bn_eps: float = 1e-3,
+    s_out: Optional[float] = None,
+    in_qmax: Optional[int] = None,
+    bipolar: bool = False,
+) -> ThresholdDense:
+    """Convert one (Conv2D [BatchNorm] + ReLU + act-quant) stage to thresholds.
+
+    The conv reduces to a matmul on the im2col patch matrix, so the result is
+    the same ``ThresholdDense`` form with w_int of shape (kh*kw*cin, cout) —
+    exactly what ``deploy.lower`` feeds the fused Pallas kernel.
+    """
+    k_folded, b_folded = _fold_affine_conv(params, bn_eps)
+    k2d = jnp.reshape(k_folded, (-1, k_folded.shape[-1]))   # (kh*kw*cin, out)
+    wq = IntQuantizer(bits=weight_bits, signed=True, narrow=True, axis=0)
+    w_int, s_w = wq.quantize_int(k2d)
+    s_w = jnp.squeeze(s_w, axis=0)
+    if s_out is None and not bipolar:
+        s_out = choose_act_scale(k2d, b_folded, in_scale=in_scale,
+                                 act_bits=act_bits, in_qmax=in_qmax)
+    return make_threshold_stage(
+        w_int, s_w, b_folded, in_scale=in_scale, act_bits=act_bits,
+        s_out=s_out, bipolar=bipolar, weight_bits=weight_bits)
 
 
 def apply_threshold_dense(stage: ThresholdDense, x_int):

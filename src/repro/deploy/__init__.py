@@ -1,15 +1,29 @@
 """repro.deploy — the QIR -> Pallas dataflow compiler and scenario runtime.
 
 Closes the paper's loop: quantization-aware training exports a QIR graph
-(``core.qir``), this package streamlines and fuses it into integer dataflow
-stages (``lower``), compiles the stage schedule into one jit program with an
+(``core.qir``: ``export_qmlp`` for the MLPs, ``export_qcnn`` for the conv
+nets), this package streamlines and fuses it into integer dataflow stages
+(``lower``), compiles the stage schedule into one jit program with an
 optional FIFO-sized streaming pipeline (``executor``), and measures it under
 the MLPerf Tiny load scenarios (``scenarios``).
 
-    graph = export_qmlp(...)
-    model = compile_graph(graph, in_scale=0.05)
+What actually lowers to fused integer stages:
+
+  * ``Dense  -> [BatchNorm] -> Relu -> Quant``  -> multi-threshold matmul
+  * ``Conv2D -> [BatchNorm] -> Relu -> Quant``  -> im2col + the same kernel
+  * ``Dense|Conv2D -> Quant(bipolar)``          -> single-threshold sign bank
+    (the binary CNV path)
+  * ``MaxPool`` / ``Flatten``                   -> integer pool / reshape
+  * a trailing ``Dense``                        -> float logits head
+
+Anything else falls back to a float per-node reference chain, so every
+exported graph runs — just not fused.
+
+    graph = export_qcnn(model, params, calibrate=x_cal)
+    model = compile_graph(graph, in_scale=graph.meta["in_scale"])
     logits = model.offline(x_int)                     # MLPerf Offline
-    reports = run_all_scenarios(model.offline, mk)    # the LoadGen sweep
+    reports = run_all_scenarios(model.offline, mk,    # the LoadGen sweep
+                                compiled=model)       # + per-stage latency
 """
 
 from repro.deploy.executor import (  # noqa: F401
@@ -19,11 +33,18 @@ from repro.deploy.executor import (  # noqa: F401
     compile_graph,
 )
 from repro.deploy.lower import (  # noqa: F401
+    ChainMatch,
+    ConvGeom,
+    FlattenStage,
     FloatHeadStage,
+    FusedConvThresholdStage,
     FusedThresholdStage,
+    IntPoolStage,
     RefChainStage,
     StageSchedule,
+    im2col,
     lower_graph,
+    stage_for,
 )
 from repro.deploy.scenarios import (  # noqa: F401
     ScenarioReport,

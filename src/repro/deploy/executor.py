@@ -32,8 +32,11 @@ from repro.core.dataflow import Stage as SimStage
 from repro.core.dataflow import optimize_fifo_depths
 from repro.core.qir import Graph
 from repro.deploy.lower import (
+    FlattenStage,
     FloatHeadStage,
+    FusedConvThresholdStage,
     FusedThresholdStage,
+    IntPoolStage,
     RefChainStage,
     StageSchedule,
     lower_graph,
@@ -74,11 +77,11 @@ class CompiledTinyModel:
 
     # -- single-program (offline) path -----------------------------------
     def _apply_stage(self, s, h):
-        if isinstance(s, FusedThresholdStage):
+        if isinstance(s, (FusedThresholdStage, FusedConvThresholdStage)):
             if self.use_pallas:
                 return s.apply_kernel(h, interpret=self.interpret)
             return s.apply_fast(h)
-        if isinstance(s, FloatHeadStage):
+        if isinstance(s, (IntPoolStage, FlattenStage, FloatHeadStage)):
             return s.apply_ref(h)
         if isinstance(s, RefChainStage):
             if jnp.issubdtype(h.dtype, jnp.integer):
@@ -120,17 +123,46 @@ class CompiledTinyModel:
         out = self.graph.run({self.graph.inputs[0]: x})
         return jnp.asarray(out[self.graph.outputs[0]])
 
+    # -- per-stage timing (feeds the scenario stage_ms breakdown) ---------
+    def stage_latencies(self, x, iters: int = 2) -> List[Dict[str, object]]:
+        """Median wall-time per compiled stage on one representative batch.
+
+        Runs the per-stage programs in schedule order (each stage's input is
+        the previous stage's real output) so conv-vs-dense costs are visible
+        in scenario reports."""
+        import time
+
+        out = []
+        h = jnp.asarray(x)
+        for s, fn in zip(self.schedule.stages, self._stage_fns):
+            y = fn(h)
+            jax.block_until_ready(y)  # compile + warm
+            times = []
+            for _ in range(max(iters, 1)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(h))
+                times.append(time.perf_counter() - t0)
+            times.sort()
+            out.append({"stage": s.name, "kind": type(s).__name__,
+                        "ms": times[len(times) // 2] * 1e3})
+            h = y
+        return out
+
     # -- streaming (micro-batched pipeline) -------------------------------
     def plan_streaming(self, n_micro: int) -> Tuple[List[int], int]:
         """Size the inter-stage queues with the paper's FIFO pass.
 
-        Each stage's simulated latency is proportional to its MAC count, so
-        rate mismatches between wide and narrow layers show up as occupancy
-        — exactly what the RTL simulation measured on the FPGA.
+        Each stage's simulated latency is proportional to its work — MACs
+        for dense stages, output tiles times the im2col patch size for conv
+        stages (``macs`` on each stage class) — so rate mismatches between
+        wide and narrow layers show up as occupancy, exactly what the RTL
+        simulation measured on the FPGA.
         """
         sim = []
         for s in self.schedule.stages:
-            macs = s.in_dim * s.out_dim
+            macs = getattr(s, "macs", None)
+            if macs is None:
+                macs = s.in_dim * s.out_dim
             sim.append(SimStage(name=s.name, ii=1,
                                 latency=max(1, macs // 8192) + 1,
                                 elems_in=1, elems_out=1))
@@ -195,10 +227,11 @@ def compile_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
 
 
 class CompiledJaxModel:
-    """Deployment wrapper for models without a QIR export path (the conv
-    nets): ``offline`` is the whole forward as one jit program, ``reference``
-    the eager per-layer forward. Gives the scenario runtime one uniform
-    interface across all four Table-1 models."""
+    """Deployment wrapper for models without a QIR export path: ``offline``
+    is the whole forward as one jit program, ``reference`` the eager
+    per-layer forward. The four Table-1 models all lower through the real
+    compiler now (``export_qmlp``/``export_qcnn`` + ``compile_graph``); this
+    stays as the harness for arbitrary research models."""
 
     def __init__(self, fwd: Callable, params, name: str = "jax"):
         self.name = name

@@ -4,22 +4,32 @@ This is the compiler half of the paper's deployment flow (FINN's
 ``Streamline -> to-HLS-layers`` stage, hls4ml's ``convert``): walk a
 ``core.qir.Graph``, greedily fuse every
 
-    Dense -> [BatchNorm] -> Relu -> Quant
+    Dense|Conv2D -> [BatchNorm] -> [Relu] -> Quant
 
 chain into a single integer dataflow stage (int8 matmul -> int32 accumulator
--> multi-threshold) by calling ``core.streamline.streamline_dense``, and emit
-a static ``StageSchedule`` the executor turns into one jit program.
+-> multi-threshold; convs go through im2col so they ride the same fused
+kernel), and emit a static ``StageSchedule`` the executor turns into one jit
+program. The matcher is op-generic: ``_match_chain`` produces a
+``ChainMatch`` and ``stage_for`` dispatches on the head op, so adding a new
+matmul-like op means one builder, not a new matcher.
 
-Three stage kinds cover every exported graph:
+Stage kinds covering every exported graph:
 
-  * ``FusedThresholdStage`` — the streamlined integer stage; runs on the
-    fused Pallas kernel (``kernels.ops.threshold_matmul``) on TPU, or as the
-    XLA-fused jnp reference inside the same jit program on CPU.
-  * ``FloatHeadStage``      — the final Dense head: int codes -> float
+  * ``FusedThresholdStage``     — streamlined integer dense stage; runs on
+    the fused Pallas kernel (``kernels.ops.threshold_matmul``) on TPU, or as
+    the XLA-fused searchsorted reference inside the same jit program on CPU.
+  * ``FusedConvThresholdStage`` — streamlined integer conv stage: im2col
+    patch extraction feeding the *same* threshold-matmul, with the bank
+    built by ``core.streamline`` (BN folded into the kernel, exact half-up
+    rounding; FINN-style bipolar sign banks for the binary CNV).
+  * ``IntPoolStage``            — MaxPool on integer codes (max commutes
+    with the monotone code -> value map, so pooling codes is exact).
+  * ``FlattenStage``            — NHWC -> flat reshape between conv and FC.
+  * ``FloatHeadStage``          — the final Dense head: int codes -> float
     logits in one affine (the paper drops softmax; argmax suffices).
-  * ``RefChainStage``       — fallback: any suffix of nodes the matcher does
-    not recognize runs through a float JAX interpreter, so *any* exported
-    graph is executable (just not fused).
+  * ``RefChainStage``           — fallback: any suffix of nodes the matcher
+    does not recognize runs through a float JAX interpreter, so *any*
+    exported graph is executable (just not fused).
 
 The schedule records value scales at every boundary so integer and float
 stages compose exactly.
@@ -38,38 +48,114 @@ from repro.core.qir import Graph, Node
 from repro.core.streamline import (
     ThresholdDense,
     apply_threshold_dense,
+    make_threshold_stage,
+    multi_threshold,
     multi_threshold_sorted,
+    streamline_conv,
     streamline_dense,
 )
+
+
+# ---------------------------------------------------------------------------
+# im2col
+# ---------------------------------------------------------------------------
+
+def im2col(x, kernel: int, stride: int, padding: str):
+    """Extract conv patches: (N, H, W, C) -> (N, OH, OW, kernel*kernel*C).
+
+    Feature order is (kh, kw, c) row-major — identical to reshaping an HWIO
+    kernel to (kh*kw*cin, cout), so ``patches @ w2d`` is the convolution.
+    SAME zero-pads like XLA/TF (low side gets floor(pad/2)); zero padding is
+    exact on integer codes whenever code 0 means value 0 (signed inputs and
+    unsigned half-up codes — the bipolar CNV uses VALID convs only).
+    """
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        oh, ow = -(-h // stride), -(-w // stride)
+        ph = max((oh - 1) * stride + kernel - h, 0)
+        pw = max((ow - 1) * stride + kernel - w, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+    else:
+        oh, ow = (h - kernel) // stride + 1, (w - kernel) // stride + 1
+    cols = [x[:, i:i + stride * (oh - 1) + 1:stride,
+              j:j + stride * (ow - 1) + 1:stride, :]
+            for i in range(kernel) for j in range(kernel)]
+    return jnp.concatenate(cols, axis=-1)
 
 
 # ---------------------------------------------------------------------------
 # stage kinds
 # ---------------------------------------------------------------------------
 
+def _float_mm_safe(w_int, in_bits: int) -> bool:
+    """True when the stage's integer matmul can run *exactly* in float32.
+
+    Integer arithmetic in float32 is exact while every partial sum stays
+    below 2^24; any accumulation order then yields the same integers, so the
+    accumulator can take the BLAS SGEMM path on CPU (int32 matmuls lower to
+    scalar loops there) without giving up bit-exactness. The bound is the
+    worst case over output channels: sum_k |w_int[k, c]| times the largest
+    input code."""
+    colsum = np.sum(np.abs(np.asarray(w_int, np.int64)), axis=0)
+    worst = int(colsum.max()) if colsum.size else 0
+    return worst * ((1 << in_bits) - 1) < (1 << 24)
+
+
+def _apply_act(stage: ThresholdDense, affine, acc):
+    """Integer activation on the accumulator, fastest exact form available.
+
+    ``affine`` is the O(1) arithmetic short-cut (mul, add) per channel:
+    when every scale in the stage is a power of two and the bias sits on the
+    accumulator grid (the conv exporter's contract), the half-up quant
+    q = clip(floor(acc*mul + add), 0, S) is exact in float32 and therefore
+    bit-identical to counting thresholds — without the O(log S) gather loop.
+    Otherwise fall back to the sorted-bank searchsorted (or, for single-step
+    sign banks, one broadcast compare)."""
+    if affine is not None:
+        mul, add = affine
+        q = jnp.floor(acc.astype(jnp.float32) * mul + add)
+        return jnp.clip(q, 0, stage.n_steps).astype(jnp.int32)
+    return multi_threshold_sorted(acc, stage.thresholds)
+
+
 @dataclasses.dataclass
 class FusedThresholdStage:
-    """One streamlined integer dataflow stage (see core/streamline.py)."""
+    """One streamlined integer dense stage (see core/streamline.py)."""
 
     name: str
     stage: ThresholdDense
     in_dim: int
     out_dim: int
     in_scale: float
+    in_bits: int = 8
+    mm_float: bool = False   # exact float32 GEMM path (see _float_mm_safe)
+    affine: Optional[tuple] = None   # exact O(1) activation (see _apply_act)
 
     @property
     def out_scale(self) -> float:
         return self.stage.out_scale
 
+    @property
+    def macs(self) -> int:
+        return self.in_dim * self.out_dim
+
+    def _acc(self, x_int):
+        if self.mm_float:
+            return jnp.matmul(x_int.astype(jnp.float32),
+                              self.stage.w_int.astype(jnp.float32)
+                              ).astype(jnp.int32)
+        return jnp.matmul(x_int.astype(jnp.int32),
+                          self.stage.w_int.astype(jnp.int32))
+
     def apply_ref(self, x_int):
         return apply_threshold_dense(self.stage, x_int)
 
     def apply_fast(self, x_int):
-        """CPU/XLA path: int32 matmul + sorted-bank searchsorted activation
-        — bit-identical to ``apply_ref`` but O(log S) in the step count."""
-        acc = jnp.matmul(x_int.astype(jnp.int32),
-                         self.stage.w_int.astype(jnp.int32))
-        return multi_threshold_sorted(acc, self.stage.thresholds)
+        """CPU/XLA path: (exact-float or int32) matmul + exact activation
+        — bit-identical to ``apply_ref``, SGEMM-backed when the bound
+        allows, O(1) or O(log S) in the step count."""
+        return _apply_act(self.stage, self.affine, self._acc(x_int))
 
     def apply_kernel(self, x_int, *, interpret: Optional[bool] = None):
         from repro.kernels import ops
@@ -83,6 +169,171 @@ class FusedThresholdStage:
 
 
 @dataclasses.dataclass
+class ConvGeom:
+    """Static conv geometry a fused conv stage needs at trace time."""
+
+    kernel: int
+    stride: int
+    padding: str
+    in_h: int
+    in_w: int
+    in_ch: int
+    out_h: int
+    out_w: int
+    out_ch: int
+
+
+@dataclasses.dataclass
+class FusedConvThresholdStage:
+    """One streamlined integer conv stage: im2col + threshold matmul.
+
+    ``stage.w_int`` holds the (kernel*kernel*in_ch, out_ch) im2col weight
+    matrix; the integer accumulator and threshold bank are identical to the
+    dense case, so the Pallas kernel and the searchsorted CPU path are
+    shared with ``FusedThresholdStage``.
+    """
+
+    name: str
+    stage: ThresholdDense
+    geom: ConvGeom
+    in_scale: float
+    in_bits: int = 8
+    mm_float: bool = False   # exact float32 GEMM path (see _float_mm_safe)
+    affine: Optional[tuple] = None   # exact O(1) activation (see _apply_act)
+
+    @property
+    def out_scale(self) -> float:
+        return self.stage.out_scale
+
+    @property
+    def in_dim(self) -> int:
+        return self.geom.in_h * self.geom.in_w * self.geom.in_ch
+
+    @property
+    def out_dim(self) -> int:
+        return self.geom.out_h * self.geom.out_w * self.geom.out_ch
+
+    @property
+    def macs(self) -> int:
+        g = self.geom
+        return g.out_h * g.out_w * g.kernel * g.kernel * g.in_ch * g.out_ch
+
+    def _cols2d(self, x_int):
+        g = self.geom
+        x = x_int.reshape(-1, g.in_h, g.in_w, g.in_ch)
+        cols = im2col(x, g.kernel, g.stride, g.padding)
+        return cols.reshape(-1, g.kernel * g.kernel * g.in_ch)
+
+    def _shape_out(self, y2d, n):
+        g = self.geom
+        return y2d.reshape(n, g.out_h, g.out_w, g.out_ch)
+
+    def apply_ref(self, x_int):
+        acc = jnp.matmul(self._cols2d(x_int).astype(jnp.int32),
+                         self.stage.w_int.astype(jnp.int32))
+        return self._shape_out(multi_threshold(acc, self.stage.thresholds),
+                               x_int.shape[0])
+
+    def apply_fast(self, x_int):
+        """CPU/XLA path. With the exactness bound satisfied the accumulator
+        comes from XLA's native float32 convolution (integer-valued, so
+        bit-identical to the int32 im2col matmul but Eigen-optimized);
+        otherwise we im2col and accumulate in int32."""
+        g = self.geom
+        if self.mm_float:
+            x = x_int.reshape(-1, g.in_h, g.in_w, g.in_ch).astype(jnp.float32)
+            w4 = self.stage.w_int.astype(jnp.float32).reshape(
+                g.kernel, g.kernel, g.in_ch, g.out_ch)
+            acc = jax.lax.conv_general_dilated(
+                x, w4, (g.stride, g.stride), g.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(jnp.int32)
+            return _apply_act(self.stage, self.affine, acc)
+        acc = jnp.matmul(self._cols2d(x_int).astype(jnp.int32),
+                         self.stage.w_int.astype(jnp.int32))
+        return self._shape_out(
+            _apply_act(self.stage, self.affine, acc), x_int.shape[0])
+
+    def apply_kernel(self, x_int, *, interpret: Optional[bool] = None):
+        from repro.kernels import ops
+
+        y = ops.threshold_matmul(
+            self._cols2d(x_int).astype(jnp.int32), self.stage.w_int,
+            self.stage.thresholds, interpret=interpret)
+        return self._shape_out(y, x_int.shape[0])
+
+
+@dataclasses.dataclass
+class IntPoolStage:
+    """MaxPool executed directly on integer codes.
+
+    Exact because code -> value is monotone (value = code * scale for the
+    half-up banks; value = 2*code - 1 for bipolar), so max commutes with the
+    decoding either way. Scale passes through unchanged.
+    """
+
+    name: str
+    window: int
+    stride: int
+    padding: str
+    in_h: int
+    in_w: int
+    ch: int
+    out_h: int
+    out_w: int
+    in_scale: float
+    in_bits: int = 8
+
+    @property
+    def out_scale(self) -> float:
+        return self.in_scale
+
+    @property
+    def in_dim(self) -> int:
+        return self.in_h * self.in_w * self.ch
+
+    @property
+    def out_dim(self) -> int:
+        return self.out_h * self.out_w * self.ch
+
+    @property
+    def macs(self) -> int:
+        return self.out_h * self.out_w * self.ch * self.window * self.window
+
+    def apply_ref(self, x):
+        x = x.reshape(-1, self.in_h, self.in_w, self.ch)
+        init = (jnp.iinfo(x.dtype).min
+                if jnp.issubdtype(x.dtype, jnp.integer) else -jnp.inf)
+        return jax.lax.reduce_window(
+            x, init, jax.lax.max, (1, self.window, self.window, 1),
+            (1, self.stride, self.stride, 1), self.padding)
+
+
+@dataclasses.dataclass
+class FlattenStage:
+    """NHWC -> (N, H*W*C) reshape between the conv stack and the FC head."""
+
+    name: str
+    in_dim: int
+    in_scale: float
+    in_bits: int = 8
+
+    @property
+    def out_dim(self) -> int:
+        return self.in_dim
+
+    @property
+    def out_scale(self) -> float:
+        return self.in_scale
+
+    @property
+    def macs(self) -> int:
+        return self.in_dim  # pure data movement
+
+    def apply_ref(self, x):
+        return x.reshape(x.shape[0], -1)
+
+
+@dataclasses.dataclass
 class FloatHeadStage:
     """Final affine head: logits = x_int * in_scale @ w + b (float out)."""
 
@@ -92,6 +343,11 @@ class FloatHeadStage:
     in_dim: int
     out_dim: int
     in_scale: float
+    in_bits: int = 8
+
+    @property
+    def macs(self) -> int:
+        return self.in_dim * self.out_dim
 
     def apply_ref(self, x_int):
         return x_int.astype(jnp.float32) @ self.w * self.in_scale + self.b
@@ -113,6 +369,7 @@ class RefChainStage:
     in_dim: int
     out_dim: int
     in_scale: float
+    in_bits: int = 8
 
     def apply_ref(self, x_float):
         from repro.core.qir import eval_node
@@ -126,7 +383,8 @@ class RefChainStage:
         return env[self.out_name]
 
 
-Stage = Union[FusedThresholdStage, FloatHeadStage, RefChainStage]
+Stage = Union[FusedThresholdStage, FusedConvThresholdStage, IntPoolStage,
+              FlattenStage, FloatHeadStage, RefChainStage]
 
 
 @dataclasses.dataclass
@@ -140,7 +398,14 @@ class StageSchedule:
 
     @property
     def n_fused(self) -> int:
-        return sum(isinstance(s, FusedThresholdStage) for s in self.stages)
+        return sum(isinstance(s, (FusedThresholdStage,
+                                  FusedConvThresholdStage))
+                   for s in self.stages)
+
+    @property
+    def n_fused_conv(self) -> int:
+        return sum(isinstance(s, FusedConvThresholdStage)
+                   for s in self.stages)
 
     def layer_dims(self) -> List[int]:
         dims = [self.stages[0].in_dim]
@@ -150,10 +415,11 @@ class StageSchedule:
 
     def describe(self) -> str:
         rows = [f"schedule: {len(self.stages)} stages "
-                f"({self.n_fused} fused int, in_scale={self.in_scale:g})"]
+                f"({self.n_fused} fused int, {self.n_fused_conv} conv, "
+                f"in_scale={self.in_scale:g})"]
         for s in self.stages:
             kind = type(s).__name__
-            rows.append(f"  {s.name:16s} {kind:20s} {s.in_dim:>5d} -> {s.out_dim}")
+            rows.append(f"  {s.name:16s} {kind:24s} {s.in_dim:>6d} -> {s.out_dim}")
         return "\n".join(rows)
 
 
@@ -161,15 +427,30 @@ class StageSchedule:
 # pattern matcher
 # ---------------------------------------------------------------------------
 
-def _dense_params(graph: Graph, node: Node) -> Optional[Dict[str, np.ndarray]]:
-    """Pull (w, b) for a Dense node; None if weights are not initializers."""
+@dataclasses.dataclass
+class ChainMatch:
+    """One fusable Dense|Conv2D -> [BatchNorm] -> [Relu] -> Quant run."""
+
+    kind: str                         # "dense" | "conv"
+    head: Node
+    params: Dict[str, np.ndarray]     # w, b (+ BN stats when present)
+    act: str                          # "halfup" | "bipolar"
+    act_bits: int
+    weight_bits: int
+    s_out: Optional[float]            # export-frozen activation scale
+    w_scale: Optional[np.ndarray]     # per-channel scale: weights pre-quantized
+    n_consumed: int
+
+
+def _head_params(graph: Graph, node: Node) -> Optional[Dict[str, np.ndarray]]:
+    """Pull (w, b) for a Dense/Conv2D node; None unless w is an initializer."""
     if len(node.inputs) < 2 or node.inputs[1] not in graph.initializers:
         return None
     w = graph.initializers[node.inputs[1]]
     b = (graph.initializers.get(node.inputs[2])
          if len(node.inputs) > 2 else None)
     if b is None:
-        b = np.zeros((w.shape[1],), np.float32)
+        b = np.zeros((w.shape[-1],), np.float32)
     return {"w": w, "b": b}
 
 
@@ -181,20 +462,31 @@ def _is_linear_value(graph: Graph, name: str) -> bool:
     return sum(name in n.inputs for n in graph.nodes) == 1
 
 
-def _match_fused_chain(graph: Graph, nodes: List[Node], i: int):
-    """Try to match Dense -> [BatchNorm] -> Relu -> Quant starting at i.
+def _is_passthrough_value(graph: Graph, name: str) -> bool:
+    """Weaker check for values that survive as stage outputs (pool/flatten):
+    at most one consumer, so the stage pipeline stays a chain."""
+    return sum(name in n.inputs for n in graph.nodes) <= 1
 
-    Returns (params, act_bits, weight_bits, n_consumed) or None. The chain
-    must be linear: each intermediate value feeds exactly the next node and
-    nothing else (fusion erases it from the runtime environment).
+
+def _match_chain(graph: Graph, nodes: List[Node], i: int
+                 ) -> Optional[ChainMatch]:
+    """Try to match Dense|Conv2D -> [BatchNorm] -> [Relu] -> Quant at i.
+
+    The chain must be linear: each intermediate value feeds exactly the next
+    node and nothing else (fusion erases it from the runtime environment).
+    A Relu is required for the half-up quant flavor (it is what makes the
+    output codes unsigned); bipolar sign quants fuse without one.
     """
-    if nodes[i].op != "Dense":
+    head = nodes[i]
+    if head.op not in ("Dense", "Conv2D"):
         return None
-    params = _dense_params(graph, nodes[i])
+    if head.op == "Conv2D" and "in_shape" not in head.attrs:
+        return None  # no static geometry: leave for the fallback interpreter
+    params = _head_params(graph, head)
     if params is None:
         return None
     j = i + 1
-    prev_out = nodes[i].outputs[0]
+    prev_out = head.outputs[0]
     if not _is_linear_value(graph, prev_out):
         return None
     if j < len(nodes) and nodes[j].op == "BatchNorm" and nodes[j].inputs[0] == prev_out:
@@ -208,18 +500,130 @@ def _match_fused_chain(graph: Graph, nodes: List[Node], i: int):
         j += 1
         if not _is_linear_value(graph, prev_out):
             return None
-    if not (j < len(nodes) and nodes[j].op == "Relu" and nodes[j].inputs[0] == prev_out):
-        return None
-    prev_out = nodes[j].outputs[0]
-    j += 1
-    if not _is_linear_value(graph, prev_out):
-        return None
+    relu = False
+    if j < len(nodes) and nodes[j].op == "Relu" and nodes[j].inputs[0] == prev_out:
+        relu = True
+        prev_out = nodes[j].outputs[0]
+        j += 1
+        if not _is_linear_value(graph, prev_out):
+            return None
     if not (j < len(nodes) and nodes[j].op == "Quant"
             and nodes[j].inputs[0] == prev_out and nodes[j].quant is not None):
         return None
-    act_bits = nodes[j].quant.bits
-    weight_bits = nodes[i].attrs.get("weight_bits", act_bits)
-    return params, act_bits, weight_bits, j + 1 - i
+    quant = nodes[j]
+    bipolar = bool(quant.attrs.get("bipolar"))
+    if bipolar == relu:
+        # half-up needs the ReLU; a sign bank after ReLU would be constant
+        return None
+    act_bits = quant.quant.bits
+    weight_bits = head.attrs.get("weight_bits", act_bits)
+    w_scale = None
+    ws_name = head.attrs.get("w_scale")
+    if ws_name is not None and ws_name in graph.initializers and "gamma" not in params:
+        # pre-quantized weights; unusable under BN (folding rescales them)
+        w_scale = graph.initializers[ws_name]
+    s_out = quant.attrs.get("scale")
+    return ChainMatch(
+        kind="dense" if head.op == "Dense" else "conv",
+        head=head, params=params,
+        act="bipolar" if bipolar else "halfup",
+        act_bits=act_bits, weight_bits=weight_bits,
+        s_out=None if s_out is None else float(s_out),
+        w_scale=w_scale, n_consumed=j + 1 - i)
+
+
+def _threshold_for_chain(m: ChainMatch, scale: float,
+                         bn_eps: float) -> ThresholdDense:
+    """Streamline one matched chain into a ThresholdDense bank."""
+    w = np.asarray(m.params["w"], np.float32)
+    w2d = w.reshape(-1, w.shape[-1])
+    if m.w_scale is not None:
+        # weights already carry integer codes times a per-channel scale;
+        # divide it back out (exact: the exporter used po2 / unit scales)
+        s_w = jnp.reshape(jnp.asarray(m.w_scale, jnp.float32), (-1,))
+        w_int = jnp.round(jnp.asarray(w2d) / s_w[None, :])
+        return make_threshold_stage(
+            w_int, s_w, m.params["b"], in_scale=scale, act_bits=m.act_bits,
+            s_out=m.s_out, bipolar=m.act == "bipolar",
+            weight_bits=m.weight_bits)
+    if m.kind == "conv":
+        return streamline_conv(
+            m.params, weight_bits=m.weight_bits, act_bits=m.act_bits,
+            in_scale=scale, bn_eps=bn_eps, s_out=m.s_out,
+            bipolar=m.act == "bipolar")
+    if m.act == "bipolar":
+        from repro.core.quantizers import IntQuantizer
+
+        wq = IntQuantizer(bits=m.weight_bits, signed=True, narrow=True, axis=0)
+        w_int, s_w = wq.quantize_int(jnp.asarray(w2d))
+        return make_threshold_stage(
+            w_int, jnp.squeeze(s_w, axis=0), m.params["b"], in_scale=scale,
+            act_bits=m.act_bits, bipolar=True, weight_bits=m.weight_bits)
+    return streamline_dense(
+        m.params, weight_bits=m.weight_bits, act_bits=m.act_bits,
+        in_scale=scale, bn_eps=bn_eps, s_out=m.s_out)
+
+
+def _exact_affine(m: ChainMatch, td: ThresholdDense, scale: float,
+                  mm_safe: bool, in_bits: int) -> Optional[tuple]:
+    """(mul, add) for the O(1) activation, or None when not provably exact.
+
+    Requires: half-up flavor with an export-frozen s_out, pre-quantized
+    weights whose per-channel scales (and in_scale/s_out) are powers of two,
+    bias on the accumulator grid, and the 2^24 accumulator bound — i.e. the
+    ``export_qcnn`` contract. Under those conditions every term of
+    acc*mul + add is an exact float32 multiple of g/s_out, so floor/clip
+    reproduce the threshold counts bit for bit.
+    """
+    if (m.act != "halfup" or m.s_out is None or m.w_scale is None
+            or not mm_safe):
+        return None
+    s_w = np.asarray(m.w_scale, np.float64).reshape(-1)
+    grids = np.concatenate([s_w, [scale, td.out_scale]])
+    if not np.all(grids > 0):
+        return None
+    logs = np.log2(grids)
+    if not np.all(logs == np.round(logs)):
+        return None
+    g = s_w * scale                        # accumulator grid per channel
+    r1 = g / td.out_scale                  # activation grid in code units
+    b = np.asarray(m.params["b"], np.float64).reshape(-1)
+    if not (np.all(b / g == np.round(b / g)) and np.all(r1 <= 0.5)):
+        return None                        # bias off-grid / 0.5 off-grid
+    # every term of acc*mul + add is k*r1; exactness needs max|k| < 2^24
+    colsum = np.sum(np.abs(np.asarray(td.w_int, np.int64)), axis=0)
+    k_max = (colsum * ((1 << in_bits) - 1) + np.abs(b / g) + 0.5 / r1)
+    if not np.all(k_max < (1 << 24)):
+        return None
+    mul = jnp.asarray((g / td.out_scale).astype(np.float32))
+    add = jnp.asarray((b / td.out_scale + 0.5).astype(np.float32))
+    return (mul, add)
+
+
+def stage_for(m: ChainMatch, scale: float, in_bits: int = 8,
+              bn_eps: float = 1e-3) -> Stage:
+    """Build the fused stage for one matched chain — the op dispatch point."""
+    td = _threshold_for_chain(m, scale, bn_eps)
+    mm_float = _float_mm_safe(td.w_int, in_bits)
+    affine = _exact_affine(m, td, scale, mm_float, in_bits)
+    if m.kind == "conv":
+        a = m.head.attrs
+        ih, iw, ic = a["in_shape"]
+        oh, ow, oc = a["out_shape"]
+        geom = ConvGeom(kernel=int(a.get("kernel", m.params["w"].shape[0])),
+                        stride=int(a.get("stride", 1)),
+                        padding=a.get("padding", "SAME"),
+                        in_h=int(ih), in_w=int(iw), in_ch=int(ic),
+                        out_h=int(oh), out_w=int(ow), out_ch=int(oc))
+        return FusedConvThresholdStage(name=m.head.name, stage=td, geom=geom,
+                                       in_scale=scale, in_bits=in_bits,
+                                       mm_float=mm_float, affine=affine)
+    w = m.params["w"]
+    return FusedThresholdStage(name=m.head.name, stage=td,
+                               in_dim=int(w.shape[0]),
+                               out_dim=int(w.shape[1]),
+                               in_scale=scale, in_bits=in_bits,
+                               mm_float=mm_float, affine=affine)
 
 
 def lower_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
@@ -228,29 +632,53 @@ def lower_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
 
     ``in_scale`` is the float value of one integer step of the (already
     quantized) network input — the paper's 8-bit input layer contract.
+    Conv exporters record their contract in ``graph.meta["in_scale"]``.
     """
     stages: List[Stage] = []
     nodes = graph.nodes
     scale = in_scale
+    in_bits = 8   # MLPerf-Tiny 8-bit input layer contract
     i = 0
     while i < len(nodes):
-        m = _match_fused_chain(graph, nodes, i)
+        m = _match_chain(graph, nodes, i)
         if m is not None:
-            params, act_bits, weight_bits, consumed = m
-            td = streamline_dense(
-                params, weight_bits=weight_bits, act_bits=act_bits,
-                in_scale=scale, bn_eps=bn_eps)
-            stages.append(FusedThresholdStage(
-                name=nodes[i].name, stage=td,
-                in_dim=int(params["w"].shape[0]),
-                out_dim=int(params["w"].shape[1]),
-                in_scale=scale))
-            scale = td.out_scale
-            i += consumed
+            st = stage_for(m, scale, in_bits, bn_eps)
+            stages.append(st)
+            scale = st.out_scale
+            in_bits = st.stage.act_bits
+            i += m.n_consumed
             continue
         node = nodes[i]
+        if (node.op == "MaxPool" and "in_shape" in node.attrs
+                and _is_passthrough_value(graph, node.outputs[0])):
+            ih, iw, ch = (int(v) for v in node.attrs["in_shape"])
+            win = int(node.attrs.get("window", 2))
+            stride = int(node.attrs.get("stride", win))
+            if "out_shape" in node.attrs:
+                oh, ow = int(node.attrs["out_shape"][0]), int(node.attrs["out_shape"][1])
+            elif node.attrs.get("padding", "VALID") == "SAME":
+                oh, ow = -(-ih // stride), -(-iw // stride)
+            else:
+                oh, ow = (ih - win) // stride + 1, (iw - win) // stride + 1
+            stages.append(IntPoolStage(
+                name=node.name, window=win, stride=stride,
+                padding=node.attrs.get("padding", "VALID"),
+                in_h=ih, in_w=iw, ch=ch, out_h=oh, out_w=ow,
+                in_scale=scale, in_bits=in_bits))
+            i += 1
+            continue
+        if (node.op == "Flatten"
+                and _is_passthrough_value(graph, node.outputs[0])):
+            if "in_shape" in node.attrs:
+                in_dim = int(np.prod(node.attrs["in_shape"]))
+            else:
+                in_dim = stages[-1].out_dim if stages else 1
+            stages.append(FlattenStage(name=node.name, in_dim=in_dim,
+                                       in_scale=scale, in_bits=in_bits))
+            i += 1
+            continue
         if node.op == "Dense" and i == len(nodes) - 1:
-            params = _dense_params(graph, node)
+            params = _head_params(graph, node)
             if params is not None:
                 stages.append(FloatHeadStage(
                     name=node.name,
@@ -258,7 +686,7 @@ def lower_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
                     b=jnp.asarray(params["b"], jnp.float32),
                     in_dim=int(params["w"].shape[0]),
                     out_dim=int(params["w"].shape[1]),
-                    in_scale=scale))
+                    in_scale=scale, in_bits=in_bits))
                 i += 1
                 continue
         # fallback: sweep the rest of the graph into one reference chain
@@ -275,11 +703,11 @@ def lower_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
             out_name=out_name,
             in_dim=in_dim,
             out_dim=out_dim,
-            in_scale=scale))
+            in_scale=scale, in_bits=in_bits))
         scale = 1.0  # float domain from here on
         i = len(nodes)
     return StageSchedule(stages=stages, in_scale=in_scale,
-                         meta=dict(graph.meta))
+                        meta=dict(graph.meta))
 
 
 def _guess_dim(graph: Graph, name: str, default: int = 1) -> int:

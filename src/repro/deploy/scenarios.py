@@ -40,6 +40,7 @@ class ScenarioReport:
     throughput_qps: float
     energy_proxy_uJ: Optional[float] = None      # roofline (BOPs) model
     measured_energy_uJ: Optional[float] = None   # board watts x wall latency
+    stage_ms: Optional[List[Dict]] = None        # per-stage latency breakdown
     extras: Dict = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, object]:
@@ -55,6 +56,9 @@ class ScenarioReport:
             d["roofline_uJ"] = round(self.energy_proxy_uJ, 3)
         if self.measured_energy_uJ is not None:
             d["measured_uJ"] = round(self.measured_energy_uJ, 1)
+        if self.stage_ms is not None:
+            d["stage_ms"] = "|".join(
+                f"{s['stage']}:{s['ms']:.3f}" for s in self.stage_ms)
         d.update(self.extras)
         return d
 
@@ -66,7 +70,8 @@ def _percentiles(lat_s: List[float]) -> Dict[str, float]:
             "p99": float(np.percentile(a, 99))}
 
 
-def _finish(scenario, lats, n, span, model_cost=None, bits=8, **extras):
+def _finish(scenario, lats, n, span, model_cost=None, bits=8,
+            stage_ms=None, **extras):
     p = _percentiles(lats)
     energy = None
     if model_cost is not None:
@@ -77,16 +82,28 @@ def _finish(scenario, lats, n, span, model_cost=None, bits=8, **extras):
         throughput_qps=n / max(span, 1e-9),
         energy_proxy_uJ=energy,
         measured_energy_uJ=float(np.median(lats)) * CHIP_WATTS * 1e6,
+        stage_ms=stage_ms,
         extras=extras)
+
+
+def _stage_breakdown(compiled, x) -> Optional[List[Dict]]:
+    """Per-stage latency probe on a representative batch, when the executor
+    exposes one (``CompiledTinyModel.stage_latencies``); None otherwise."""
+    probe = getattr(compiled, "stage_latencies", None)
+    if probe is None:
+        return None
+    return probe(x, iters=2)
 
 
 def single_stream(infer: Callable, make_query: Callable[[int], np.ndarray],
                   n_queries: int = 64, warmup: int = 3,
-                  model_cost=None, bits: int = 8) -> ScenarioReport:
+                  model_cost=None, bits: int = 8,
+                  compiled=None) -> ScenarioReport:
     """Batch-1 queries back to back; MLPerf scores p90 latency.
 
     ``make_query(i)`` returns ONE unbatched sample; the scenario adds the
-    batch-1 axis (every scenario batches for itself).
+    batch-1 axis (every scenario batches for itself). Pass the compiled
+    executor as ``compiled`` to attach a per-stage latency breakdown.
     """
     for w in range(warmup):
         jax.block_until_ready(infer(np.asarray(make_query(w))[None]))
@@ -98,7 +115,10 @@ def single_stream(infer: Callable, make_query: Callable[[int], np.ndarray],
         jax.block_until_ready(infer(x))
         lats.append(time.perf_counter() - t0)
     span = time.perf_counter() - t_start
-    return _finish("SingleStream", lats, n_queries, span, model_cost, bits)
+    stage_ms = (None if compiled is None
+                else _stage_breakdown(compiled, np.asarray(make_query(0))[None]))
+    return _finish("SingleStream", lats, n_queries, span, model_cost, bits,
+                   stage_ms=stage_ms)
 
 
 def multi_stream(infer: Callable, make_query: Callable[[int], np.ndarray],
@@ -124,7 +144,7 @@ def multi_stream(infer: Callable, make_query: Callable[[int], np.ndarray],
 
 def offline(infer: Callable, make_query: Callable[[int], np.ndarray],
             n_samples: int = 256, warmup: int = 2,
-            model_cost=None, bits: int = 8) -> ScenarioReport:
+            model_cost=None, bits: int = 8, compiled=None) -> ScenarioReport:
     """Whole pool in one batch; the throughput scenario."""
     xb = np.stack([make_query(i) for i in range(n_samples)])
     for _ in range(warmup):
@@ -133,8 +153,9 @@ def offline(infer: Callable, make_query: Callable[[int], np.ndarray],
     jax.block_until_ready(infer(xb))
     span = time.perf_counter() - t0
     per_query = span / n_samples
+    stage_ms = None if compiled is None else _stage_breakdown(compiled, xb)
     return _finish("Offline", [per_query] * n_samples, n_samples, span,
-                   model_cost, bits, batch=n_samples)
+                   model_cost, bits, stage_ms=stage_ms, batch=n_samples)
 
 
 def server_poisson(infer: Callable, make_query: Callable[[int], np.ndarray],
@@ -172,16 +193,16 @@ def server_poisson(infer: Callable, make_query: Callable[[int], np.ndarray],
 def run_all_scenarios(infer: Callable, make_query: Callable[[int], np.ndarray],
                       n_queries: int = 64, n_streams: int = 8,
                       offline_samples: int = 256, server_qps: float = 200.0,
-                      model_cost=None, bits: int = 8
+                      model_cost=None, bits: int = 8, compiled=None
                       ) -> List[ScenarioReport]:
     """The full MLPerf-Tiny sweep for one deployed model."""
     return [
         single_stream(infer, make_query, n_queries=n_queries,
-                      model_cost=model_cost, bits=bits),
+                      model_cost=model_cost, bits=bits, compiled=compiled),
         multi_stream(infer, make_query, n_streams=n_streams,
                      n_queries=n_queries, model_cost=model_cost, bits=bits),
         offline(infer, make_query, n_samples=offline_samples,
-                model_cost=model_cost, bits=bits),
+                model_cost=model_cost, bits=bits, compiled=compiled),
         server_poisson(infer, make_query, qps=server_qps,
                        n_queries=n_queries, model_cost=model_cost, bits=bits),
     ]

@@ -232,9 +232,12 @@ class CNVModel:
     n_classes: int = 10
     weight_bits: int = 1
     act_bits: int = 1
+    in_hw: int = 32
+    in_ch: int = 3
+    pool_after: Tuple[int, ...] = (1, 3)  # 2x2 maxpool after these convs
 
     def conv_layers(self):
-        convs, cin = [], 3
+        convs, cin = [], self.in_ch
         for i, ch in enumerate(self.channels):
             # input layer consumes 8-bit images; the rest are binary
             convs.append(QConv2D(cin, ch, kernel=3, stride=1, padding="VALID",
@@ -266,7 +269,7 @@ class CNVModel:
         for i, (c, p) in enumerate(zip(convs, params["convs"])):
             h = c.apply(p, h, train=train)
             h = ste_sign(h)  # binary activation
-            if i in (1, 3):  # maxpool after blocks 1 and 2
+            if i in self.pool_after:  # maxpool after blocks 1 and 2
                 h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
                                           (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
         h = h.reshape(h.shape[0], -1)
@@ -280,7 +283,7 @@ class CNVModel:
         return h
 
     def n_weights(self) -> int:
-        total, cin, hw = 0, 3, 32
+        total, cin, hw = 0, self.in_ch, self.in_hw
         for i, ch in enumerate(self.channels):
             total += 3 * 3 * cin * ch
             cin = ch
@@ -290,12 +293,12 @@ class CNVModel:
         return total
 
     def cost(self) -> ModelCost:
-        ls, cin, hw = [], 3, 32
+        ls, cin, hw = [], self.in_ch, self.in_hw
         for i, ch in enumerate(self.channels):
             hw = hw - 2  # VALID 3x3
             ls.append(conv_cost(f"conv{i}", cin, ch, 3, hw, hw,
                                 8 if i == 0 else 1, 1, bias=False))
-            if i in (1, 3):
+            if i in self.pool_after:
                 hw //= 2
             cin = ch
         dims = [self.channels[-1], *self.fc, self.n_classes]

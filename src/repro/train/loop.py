@@ -47,6 +47,10 @@ class LoopConfig:
     slow_factor: float = 3.0
     max_consecutive_slow: int = 5
     watchdog_warmup: int = 10
+    # floor on the reference step time: sub-millisecond steps (toy models,
+    # tests) sit inside OS scheduler jitter, so comparing against their raw
+    # median makes the watchdog fire on noise rather than stragglers
+    watchdog_min_step_s: float = 0.05
 
 
 @dataclasses.dataclass
@@ -102,7 +106,8 @@ def run_training(
 
             # ---- straggler watchdog -----------------------------------
             if len(step_times) > cfg.watchdog_warmup:
-                med = statistics.median(step_times[-50:])
+                med = max(statistics.median(step_times[-50:]),
+                          cfg.watchdog_min_step_s)
                 if dt > cfg.slow_factor * med:
                     consecutive_slow += 1
                     straggler_events += 1

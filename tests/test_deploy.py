@@ -7,12 +7,15 @@ core/streamline.py) for the Table-1 MLP models, in every execution mode
 (offline jit program, FIFO-sized streaming pipeline, Pallas kernel path).
 """
 
+import copy
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.qir import Graph, Node, export_qmlp
+from repro.core.bops import schedule_cost
+from repro.core.qir import Graph, Node, QuantSpec, export_qcnn, export_qmlp
 from repro.core.streamline import (
     float_ref_dense,
     multi_threshold,
@@ -20,8 +23,11 @@ from repro.core.streamline import (
 )
 from repro.deploy import (
     CompiledJaxModel,
+    FlattenStage,
     FloatHeadStage,
+    FusedConvThresholdStage,
     FusedThresholdStage,
+    IntPoolStage,
     RefChainStage,
     compile_graph,
     lower_graph,
@@ -32,7 +38,7 @@ from repro.deploy.scenarios import (
     server_poisson,
     single_stream,
 )
-from repro.models.tiny import ADAutoencoder, KWSMLP
+from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
 from repro.serving.engine import TinyModelServer
 
 IN_SCALE = 1.0 / 127.0
@@ -211,6 +217,210 @@ def test_qir_roundtrip_preserves_compiled_outputs():
         np.random.default_rng(6).integers(-127, 128, (4, 490)), jnp.int32)
     np.testing.assert_array_equal(np.asarray(cm1.offline(x_int)),
                                   np.asarray(cm2.offline(x_int)))
+
+
+# ---------------------------------------------------------------------------
+# conv schedules (export_qcnn -> im2col fused lowering)
+# ---------------------------------------------------------------------------
+
+def _export_ic(rng, in_hw=16):
+    model = ICModel(in_hw=in_hw)
+    params = model.init(jax.random.PRNGKey(3))
+    cal = rng.integers(-127, 128, (8, in_hw, in_hw, 3)).astype(np.int32)
+    graph = export_qcnn(model, params, calibrate=cal)
+    return model, params, graph
+
+
+def _export_cnv(rng):
+    model = CNVModel(channels=(8, 8, 16, 16, 32, 32), fc=(32, 32))
+    params = model.init(jax.random.PRNGKey(4))
+    return model, params, export_qcnn(model, params)
+
+
+def test_ic_conv_schedule_fuses_and_is_bit_exact_vs_graph_run():
+    """Tentpole parity (IC): every conv chain fuses, and the compiled
+    integer stages reproduce the unfused QIR ``Graph.run`` reference bit for
+    bit — guaranteed by the exporter's po2-grid contract, ties included."""
+    rng = np.random.default_rng(20)
+    model, params, graph = _export_ic(rng)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    assert cm.schedule.n_fused_conv == len(model.filters)
+    kinds = [type(s).__name__ for s in cm.schedule.stages]
+    assert kinds == (["FusedConvThresholdStage"] * 5
+                     + ["FlattenStage", "FloatHeadStage"])
+
+    x = jnp.asarray(rng.integers(-127, 128, (8, 16, 16, 3)), jnp.int32)
+    # intermediate integer codes vs the per-node interpreter
+    quant_outs = [n.outputs[0] for n in graph.nodes if n.op == "Quant"]
+    probe = copy.deepcopy(graph)
+    probe.outputs = list(graph.outputs) + quant_outs
+    run = probe.run({"x": np.asarray(x, np.float32) * graph.meta["in_scale"]})
+    k = 0
+    for s, o in zip(cm.schedule.stages, cm.stage_outputs(x)):
+        if isinstance(s, FusedConvThresholdStage):
+            np.testing.assert_array_equal(
+                np.asarray(o) * s.stage.out_scale, run[quant_outs[k]])
+            k += 1
+    np.testing.assert_allclose(np.asarray(cm.offline(x)), run["logits"],
+                               rtol=1e-5, atol=1e-5)
+    # decisions match the float reference and the training-time forward
+    logits = np.asarray(cm.offline(x))
+    assert (np.argmax(logits, -1) == np.argmax(run["logits"], -1)).all()
+    mlog = np.asarray(model.apply(
+        params, np.asarray(x, np.float32) * graph.meta["in_scale"],
+        train=False))
+    assert (np.argmax(mlog, -1) == np.argmax(logits, -1)).mean() >= 0.75
+
+
+def test_cnv_conv_schedule_bit_exact_and_matches_sign_forward():
+    """Tentpole parity (CNV): the bipolar export is exactly streamlinable —
+    compiled logits equal both the unfused ``Graph.run`` and a pure-sign
+    binary forward of the model weights, bit for bit (integer float32
+    arithmetic is exact below 2^24)."""
+    rng = np.random.default_rng(21)
+    model, params, graph = _export_cnv(rng)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    assert cm.schedule.n_fused_conv == len(model.channels)
+    assert sum(isinstance(s, IntPoolStage)
+               for s in cm.schedule.stages) == len(model.pool_after)
+    assert sum(isinstance(s, FlattenStage) for s in cm.schedule.stages) == 1
+
+    x = jnp.asarray(rng.integers(-127, 128, (4, 32, 32, 3)), jnp.int32)
+    logits = np.asarray(cm.offline(x))
+    run = graph.run({"x": np.asarray(x, np.float32)})["logits"]
+    np.testing.assert_array_equal(logits, np.asarray(run))
+
+    # pure-sign forward: sign weights, sign activations, no fake-quant
+    h = jnp.asarray(x, jnp.float32)
+    for i, p in enumerate(params["convs"]):
+        w = jnp.where(p["w"] >= 0, 1.0, -1.0)
+        h = jax.lax.conv_general_dilated(
+            h, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jnp.where(h >= 0, 1.0, -1.0)
+        if i in model.pool_after:
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    for j, p in enumerate(params["fcs"]):
+        h = h @ jnp.where(p["w"] >= 0, 1.0, -1.0)
+        if j < len(params["fcs"]) - 1:
+            h = jnp.where(h >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(logits, np.asarray(h))
+
+
+@pytest.mark.parametrize("maker", [_export_ic, _export_cnv])
+def test_streaming_matches_offline_on_conv_schedules(maker):
+    """Offline-vs-streaming bit-exactness for conv schedules: the FIFO-sized
+    micro-batched pipeline must produce the same integers as the single jit
+    program."""
+    rng = np.random.default_rng(22)
+    model, _, graph = maker(rng)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    hw = model.in_hw
+    x = jnp.asarray(rng.integers(-127, 128, (6, hw, hw, 3)), jnp.int32)
+    y_off = cm.offline(x)
+    y_str, stats = cm.streaming(x, micro_batch=2)
+    np.testing.assert_array_equal(np.asarray(y_off), np.asarray(y_str))
+    assert len(stats.fifo_depths) == len(cm.schedule.stages) + 1
+    assert all(o <= d for o, d in zip(stats.max_occupancy, stats.fifo_depths))
+
+
+def test_conv_pallas_kernel_path_matches_fast_path():
+    """use_pallas=True (interpret mode on CPU) runs the im2col matrix through
+    the fused threshold_matmul kernel and must produce the same integers."""
+    rng = np.random.default_rng(23)
+    model = ICModel(in_hw=8, filters=(4, 4), kernels=(3, 3), strides=(1, 2))
+    params = model.init(jax.random.PRNGKey(5))
+    cal = rng.integers(-127, 128, (4, 8, 8, 3)).astype(np.int32)
+    graph = export_qcnn(model, params, calibrate=cal)
+    cm_ref = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                           use_pallas=False)
+    cm_pl = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                          use_pallas=True, interpret=True)
+    x = jnp.asarray(rng.integers(-127, 128, (2, 8, 8, 3)), jnp.int32)
+    np.testing.assert_allclose(np.asarray(cm_ref.offline(x)),
+                               np.asarray(cm_pl.offline(x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_conv_bn_chain_fuses_and_matches_reference():
+    """A float-weight Conv2D -> BatchNorm -> Relu -> Quant graph (no export
+    metadata) still fuses: BN folds into the conv kernel per channel."""
+    rng = np.random.default_rng(24)
+    w = rng.standard_normal((3, 3, 2, 4)).astype(np.float32) * 0.3
+    g = Graph(inputs=["x"], outputs=["y"], initializers={
+        "w": w, "b": np.zeros((4,), np.float32),
+        "gamma": rng.uniform(0.5, 1.5, (4,)).astype(np.float32),
+        "beta": rng.standard_normal((4,)).astype(np.float32) * 0.1,
+        "mu": rng.standard_normal((4,)).astype(np.float32) * 0.1,
+        "sigma2": rng.uniform(0.5, 2.0, (4,)).astype(np.float32),
+    })
+    g.nodes = [
+        Node("Conv2D", "c0", ["x", "w", "b"], ["h0"],
+             attrs={"kernel": 3, "stride": 1, "padding": "SAME",
+                    "weight_bits": 8,
+                    "in_shape": [6, 6, 2], "out_shape": [6, 6, 4]}),
+        Node("BatchNorm", "bn0", ["h0", "gamma", "beta", "mu", "sigma2"],
+             ["h1"]),
+        Node("Relu", "r0", ["h1"], ["h2"]),
+        Node("Quant", "q0", ["h2"], ["y"], quant=QuantSpec(bits=4)),
+    ]
+    cm = compile_graph(g, in_scale=0.05, use_pallas=False)
+    assert isinstance(cm.schedule.stages[0], FusedConvThresholdStage)
+    x = jnp.asarray(rng.integers(-7, 8, (3, 6, 6, 2)), jnp.int32)
+    y = np.asarray(cm.offline(x))
+    assert y.shape == (3, 6, 6, 4)
+    assert y.min() >= 0 and y.max() <= 15
+    # exactness against the streamlined oracle (apply_ref == apply_fast)
+    s = cm.schedule.stages[0]
+    np.testing.assert_array_equal(np.asarray(s.apply_ref(x)), y)
+
+
+def test_conv_schedule_fifo_work_uses_output_tiles():
+    """Conv stages report im2col work (out tiles x patch), not in*out."""
+    rng = np.random.default_rng(25)
+    _, _, graph = _export_cnv(rng)
+    cm = compile_graph(graph, in_scale=1.0, use_pallas=False)
+    conv0 = cm.schedule.stages[0]
+    assert isinstance(conv0, FusedConvThresholdStage)
+    g = conv0.geom
+    assert conv0.macs == g.out_h * g.out_w * 9 * g.in_ch * g.out_ch
+    assert conv0.macs != conv0.in_dim * conv0.out_dim
+    depths, cycles = cm.plan_streaming(4)
+    assert len(depths) == len(cm.schedule.stages) + 1 and cycles > 0
+
+
+def test_schedule_cost_covers_conv_stages():
+    """bops.schedule_cost prices fused conv stages via Eq. 1 conv BOPs."""
+    rng = np.random.default_rng(26)
+    model, _, graph = _export_ic(rng, in_hw=8)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    cost = schedule_cost(cm.schedule.stages)
+    conv_layers = [l for l in cost.layers if l.name.startswith("conv")]
+    assert len(conv_layers) == cm.schedule.n_fused_conv
+    assert all(l.bops > 0 for l in conv_layers)
+    # pool/flatten stages carry no MACs
+    flat = [l for l in cost.layers if l.name == "flatten"]
+    assert flat and flat[0].bops == 0
+    assert cost.bops > 0 and cost.wm_bits > 0
+
+
+def test_scenario_reports_carry_stage_breakdown():
+    rng = np.random.default_rng(27)
+    _, _, graph = _export_ic(rng, in_hw=8)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    mk = lambda i: rng.integers(-127, 128, (8, 8, 3)).astype(np.int32)
+    rep = offline(cm.offline, mk, n_samples=4, warmup=1, compiled=cm)
+    assert rep.stage_ms is not None
+    assert [s["stage"] for s in rep.stage_ms] == \
+        [s.name for s in cm.schedule.stages]
+    assert all(s["ms"] >= 0 for s in rep.stage_ms)
+    assert "stage_ms" in rep.row()
 
 
 # ---------------------------------------------------------------------------

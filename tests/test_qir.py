@@ -1,13 +1,16 @@
 """QIR (QONNX-analogue) interchange: JSON roundtrip, reference interpreter
-parity with the training-side forward, constant folding (paper C8 / §3.5)."""
+parity with the training-side forward, constant folding (paper C8 / §3.5),
+and the conv-node semantics (Conv2D / MaxPool / Flatten) behind
+``export_qcnn``."""
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.qir import Graph, Node, QuantSpec, export_qmlp
+from repro.core.qir import Graph, Node, QuantSpec, export_qcnn, export_qmlp
 from repro.core.qlayers import QDense, QDenseBatchNorm
 from repro.core.streamline import constant_fold
+from repro.models.tiny import CNVModel, ICModel
 
 
 def _tiny_mlp(key):
@@ -73,6 +76,99 @@ def test_topk_node():
     g.nodes.append(Node("TopK", "t", ["x"], ["y"]))
     out = g.run({"x": np.asarray([[0.1, 0.9, 0.3]])})["y"]
     assert int(out[0]) == 1
+
+
+def test_conv2d_node_matches_lax_conv():
+    rng = np.random.default_rng(10)
+    x = rng.standard_normal((2, 6, 6, 3)).astype(np.float32)
+    w = rng.standard_normal((3, 3, 3, 4)).astype(np.float32)
+    b = rng.standard_normal((4,)).astype(np.float32)
+    g = Graph(inputs=["x"], outputs=["y"],
+              initializers={"w": w, "b": b})
+    g.nodes.append(Node("Conv2D", "c", ["x", "w", "b"], ["y"],
+                        attrs={"stride": 2, "padding": "SAME"}))
+    out = g.run({"x": x})["y"]
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(w), (2, 2), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=1e-6, atol=1e-6)
+    assert out.shape == (2, 3, 3, 4)
+
+
+def test_maxpool_node_float_and_integer():
+    x = np.arange(16, dtype=np.float32).reshape(1, 4, 4, 1)
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.nodes.append(Node("MaxPool", "p", ["x"], ["y"],
+                        attrs={"window": 2, "stride": 2}))
+    out = g.run({"x": x})["y"]
+    np.testing.assert_array_equal(out.reshape(2, 2), [[5, 7], [13, 15]])
+    # integer codes pool exactly (init value must not be -inf cast to int)
+    xi = np.asarray([[-5, -9], [-7, -8]], np.int32).reshape(1, 2, 2, 1)
+    out_i = g.run({"x": xi})["y"]
+    assert out_i.reshape(()) == -5 and out_i.dtype == np.int32
+
+
+def test_flatten_node_row_major():
+    x = np.arange(12, dtype=np.float32).reshape(1, 2, 3, 2)
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.nodes.append(Node("Flatten", "f", ["x"], ["y"]))
+    out = g.run({"x": x})["y"]
+    np.testing.assert_array_equal(out, x.reshape(1, 12))
+
+
+def test_quant_node_fixed_scale_and_bipolar():
+    g = Graph(inputs=["x"], outputs=["y"])
+    g.nodes.append(Node("Quant", "q", ["x"], ["y"], attrs={"scale": 0.5},
+                        quant=QuantSpec(bits=2, signed=False)))
+    # half-up on the fixed grid: clip(floor(x/0.5 + 0.5), 0, 3) * 0.5
+    out = g.run({"x": np.asarray([[-1.0, 0.24, 0.25, 1.1, 9.0]])})["y"]
+    np.testing.assert_array_equal(out, [[0.0, 0.0, 0.5, 1.0, 1.5]])
+
+    gb = Graph(inputs=["x"], outputs=["y"])
+    gb.nodes.append(Node("Quant", "s", ["x"], ["y"], attrs={"bipolar": True},
+                         quant=QuantSpec(bits=1, signed=False)))
+    out = gb.run({"x": np.asarray([[-0.1, 0.0, 2.0]])})["y"]
+    np.testing.assert_array_equal(out, [[0.0, 1.0, 1.0]])  # [x >= 0]
+
+
+def test_export_qcnn_ic_structure_and_roundtrip():
+    model = ICModel(in_hw=8, filters=(4, 4), kernels=(3, 3), strides=(1, 2))
+    params = model.init(jax.random.PRNGKey(0))
+    g = export_qcnn(model, params)
+    ops = [n.op for n in g.nodes]
+    assert ops == ["Conv2D", "Relu", "Quant"] * 2 + ["Flatten", "Dense"]
+    assert g.meta["in_scale"] == 1.0 / 128.0
+    # per-layer QuantSpecs with export-frozen po2 scales
+    for n in g.nodes:
+        if n.op == "Quant":
+            assert n.quant.bits == model.act_bits
+            s = n.attrs["scale"]
+            assert s > 0 and np.log2(s) == round(np.log2(s))
+        if n.op == "Conv2D":
+            assert n.attrs["w_scale"] in g.initializers
+            assert "in_shape" in n.attrs and "out_shape" in n.attrs
+    g2 = Graph.from_json(g.to_json())
+    x = np.random.default_rng(0).integers(-127, 128, (2, 8, 8, 3))
+    np.testing.assert_array_equal(
+        g.run({"x": x.astype(np.float32) / 128.0})["logits"],
+        g2.run({"x": x.astype(np.float32) / 128.0})["logits"])
+
+
+def test_export_qcnn_cnv_structure():
+    model = CNVModel(channels=(4, 4, 8, 8, 8, 8), fc=(16, 16))
+    params = model.init(jax.random.PRNGKey(1))
+    g = export_qcnn(model, params)
+    ops = [n.op for n in g.nodes]
+    assert ops.count("Conv2D") == 6 and ops.count("MaxPool") == 2
+    assert ops.count("Dense") == 3 and ops.count("Flatten") == 1
+    assert g.meta["in_scale"] == 1.0   # unipolar codes are the values
+    quants = [n for n in g.nodes if n.op == "Quant"]
+    assert all(n.attrs.get("bipolar") for n in quants)
+    # unipolar folding: downstream conv weights are 2*sign with -sum(w) bias
+    w1 = g.initializers["cw1"]
+    assert set(np.unique(w1)) == {-2.0, 2.0}
+    np.testing.assert_array_equal(
+        g.initializers["cb1"], -np.sum(w1 / 2.0, axis=(0, 1, 2)))
 
 
 def test_constant_folding_precomputes_quant_of_initializers():
