@@ -6,7 +6,13 @@ semantics — wall times are meaningless), so the measured comparison is
 unfused-XLA vs fused-XLA epilogue, and the Pallas win is reported
 structurally: HBM traffic eliminated by fusion (the activation tensor
 round-trips the fused stage saves), which is what moves the memory roofline
-term on real hardware."""
+term on real hardware.
+
+The conv section measures the two conv lowerings of one streamlined stage —
+the fused direct-conv path (shifted-window taps, no patch matrix) vs the
+im2col + threshold_matmul fallback — on their XLA fast paths, next to the
+lowering-aware traffic model from ``core.bops.stage_cost`` (the im2col
+matrix write+read the direct kernel never pays)."""
 
 from __future__ import annotations
 
@@ -15,6 +21,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import banner, print_rows, row, time_call
+from repro.core.bops import stage_cost
+from repro.core.streamline import make_threshold_stage
+from repro.deploy.lower import (
+    ConvGeom,
+    FusedConvThresholdStage,
+    _float_mm_safe,
+)
 from repro.kernels.ref import qmatmul_ref
 
 
@@ -58,8 +71,44 @@ def run():
             note="interpret-mode on CPU; traffic model only",
             traffic_saving=f"{inter_stage_bytes/(io_bytes+inter_stage_bytes):.0%}"),
     ]
+    rows += _conv_lowering_bench(rng)
     print_rows(rows)
     return rows
+
+
+def _conv_lowering_bench(rng):
+    """Direct-conv vs im2col lowering of one streamlined conv stage."""
+    banner("Kernel bench: fused direct-conv vs materialized im2col")
+    h = w = 32
+    c, f, k, bits = 16, 32, 3, 4
+    w_int = jnp.asarray(rng.integers(-7, 8, (k * k * c, f)), jnp.int32)
+    s_w = jnp.full((f,), 2.0 ** -4, jnp.float32)
+    b = jnp.zeros((f,), jnp.float32)
+    td = make_threshold_stage(w_int, s_w, b, in_scale=2.0 ** -5,
+                              act_bits=bits, s_out=2.0 ** -3)
+    geom = ConvGeom(kernel=k, stride=1, padding="SAME", in_h=h, in_w=w,
+                    in_ch=c, out_h=h, out_w=w, out_ch=f)
+    mm = _float_mm_safe(td.w_int, bits)
+    mk = lambda kind: FusedConvThresholdStage(
+        name=f"conv[{kind}]", stage=td, geom=geom, in_scale=2.0 ** -5,
+        in_bits=bits, mm_float=mm, lowering=kind)
+    direct, i2c = mk("direct"), mk("im2col")
+    x = jnp.asarray(rng.integers(0, 2 ** bits, (8, h, w, c)), jnp.int32)
+    f_direct = jax.jit(direct.apply_fast)
+    f_i2c = jax.jit(i2c.apply_fast)
+    assert bool(jnp.all(f_direct(x).reshape(-1) == f_i2c(x).reshape(-1)))
+    t_direct = time_call(f_direct, x)
+    t_i2c = time_call(f_i2c, x)
+    traffic_d = stage_cost(direct).traffic_bytes
+    traffic_i = stage_cost(i2c).traffic_bytes
+    return [
+        row("kernel/conv_threshold_direct", t_direct,
+            hbm_bytes_model=int(traffic_d)),
+        row("kernel/conv_threshold_im2col", t_i2c,
+            hbm_bytes_model=int(traffic_i),
+            im2col_bytes=int(traffic_i - traffic_d),
+            direct_speedup=f"{t_i2c / max(t_direct, 1e-9):.2f}x"),
+    ]
 
 
 if __name__ == "__main__":

@@ -19,6 +19,13 @@ breakdown (``stage_ms``) so conv-vs-dense stage costs are visible. The
 energy proxy for compiled models comes from ``core.bops.schedule_cost`` —
 Eq. 1 BOPs per lowered stage, conv stages included.
 
+Conv models (IC, CNV) additionally compare the two conv lowerings head to
+head on the same Offline pool: the fused direct-conv path (default; no
+materialized im2col) vs ``conv_lowering="im2col"`` (patch matrix +
+threshold_matmul), with the lowering-aware traffic model
+(``ModelCost.traffic_bytes``) printed next to the measured speedup and
+bit-exactness asserted between the two.
+
 Also prints the FIFO-sized streaming schedule for KWS and CNV (the §3.1.2
 depths feeding a real execution) and a multi-tenant section where all four
 models share one ``TinyModelServer`` queue.
@@ -56,13 +63,13 @@ def _compile_mlp(model, key):
     return compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
 
 
-def _compile_conv(model, key, rng):
+def _compile_conv(model, key, rng, conv_lowering=None):
     params = model.init(key)
     cal = rng.integers(-127, 128, (8, model.in_hw, model.in_hw,
                                    model.in_ch)).astype(np.int32)
     graph = export_qcnn(model, params, calibrate=cal)
     return compile_graph(graph, in_scale=graph.meta["in_scale"],
-                         use_pallas=False)
+                         use_pallas=False, conv_lowering=conv_lowering)
 
 
 def _time_offline(fn, xb, iters: int = 3) -> float:
@@ -137,6 +144,29 @@ def run():
             top = sorted(off.stage_ms, key=lambda s: -s["ms"])[:3]
             print(f"stage_ms[{name}]: " + " ".join(
                 f"{s['stage']}={s['ms']:.3f}ms" for s in top))
+
+        # fused direct-conv vs im2col lowering, same graph, same pool
+        if conv:
+            cm_i2c = compile_graph(cm.graph,
+                                   in_scale=cm.graph.meta["in_scale"],
+                                   use_pallas=False, conv_lowering="im2col")
+            xb_cmp = jnp.asarray(np.stack([mk(i) for i in range(n_off)]),
+                                 jnp.int32)
+            # one pass each: parity check doubles as the jit warm-up
+            assert bool(jnp.all(cm.offline(xb_cmp) == cm_i2c.offline(xb_cmp)))
+            qps_direct = _time_offline(cm.offline, xb_cmp)
+            qps_i2c = _time_offline(cm_i2c.offline, xb_cmp)
+            t_direct = cost.traffic_bytes
+            t_i2c = schedule_cost(cm_i2c.schedule.stages).traffic_bytes
+            rows.append(row(
+                f"table6/{name}/Offline/conv_lowering", 0.0,
+                fused_qps=f"{qps_direct:.0f}",
+                im2col_qps=f"{qps_i2c:.0f}",
+                fused_speedup=f"{qps_direct / max(qps_i2c, 1e-9):.2f}x",
+                fused_traffic_B=f"{t_direct:.0f}",
+                im2col_traffic_B=f"{t_i2c:.0f}",
+                im2col_bytes_saved=f"{1 - t_direct / t_i2c:.0%}",
+                beats_im2col=qps_direct > qps_i2c))
     print_rows(rows)
 
     # -- streaming mode: the FIFO pass feeding real schedules --------------

@@ -49,6 +49,7 @@ class LayerCost:
     wm_bits: int
     flops: float
     n_params: int
+    traffic_bytes: float = 0.0   # per-query memory traffic (schedule costing)
 
 
 def dense_cost(name, in_dim, out_dim, b_a=8, b_w=8, bias=True) -> LayerCost:
@@ -93,6 +94,10 @@ class ModelCost:
     def n_params(self) -> int:
         return sum(l.n_params for l in self.layers)
 
+    @property
+    def traffic_bytes(self) -> float:
+        return sum(l.traffic_bytes for l in self.layers)
+
     def cost_vs(self, ref: "ModelCost") -> float:
         return inference_cost(self.bops, self.wm_bits, ref.bops, ref.wm_bits)
 
@@ -112,6 +117,38 @@ class ModelCost:
 # compiled-schedule costing (deploy.lower stage lists)
 # ---------------------------------------------------------------------------
 
+def stage_traffic_bytes(stage) -> float:
+    """Memory-traffic model of one lowered deploy stage, for a single
+    batch-1 query (the MLPerf SingleStream unit; batched execution
+    amortizes the parameter term, which this model deliberately does not).
+
+    The stage reads its input codes and writes its output codes (int32,
+    4 bytes) and reads its parameters (int8 weight codes, int32
+    thresholds). Conv stages are lowering-aware — the point of the
+    fused direct-conv kernel: an ``im2col``-lowered stage additionally
+    writes *and* re-reads the materialized (OH*OW, K*K*C) patch matrix,
+    the O(K^2*C) blow-up the ``direct`` kernel keeps in-register. This is
+    the byte term the kernel benchmark and the scenario energy proxy chart
+    next to Eq. 1's BOPs.
+    """
+    io = 4.0 * (int(getattr(stage, "in_dim", 0))
+                + int(getattr(stage, "out_dim", 0)))
+    bank = getattr(stage, "stage", None)        # ThresholdDense, if fused
+    params = 0.0
+    if bank is not None:
+        params = (float(math.prod(bank.w_int.shape))          # int8 codes
+                  + 4.0 * float(math.prod(bank.thresholds.shape)))
+    w = getattr(stage, "w", None)               # FloatHeadStage
+    if w is not None:
+        params = 4.0 * float(math.prod(w.shape))
+    geom = getattr(stage, "geom", None)
+    if geom is not None and getattr(stage, "lowering", "direct") == "im2col":
+        patch = (geom.out_h * geom.out_w
+                 * geom.kernel * geom.kernel * geom.in_ch)
+        io += 2.0 * 4.0 * patch                 # write + read the im2col mat
+    return io + params
+
+
 def stage_cost(stage) -> LayerCost:
     """Eq. 1/2 cost of one lowered deploy stage, by duck type.
 
@@ -119,22 +156,30 @@ def stage_cost(stage) -> LayerCost:
     (kernel/out-tile geometry -> conv_bops), matmul-like stages carry
     in_dim/out_dim, and data-movement stages (pool/flatten) cost zero BOPs.
     ``in_bits``/``stage.weight_bits`` feed Eq. 1's b_a/b_w, so the energy
-    proxy of a compiled conv schedule is precision-aware end to end.
+    proxy of a compiled conv schedule is precision-aware end to end, and
+    ``traffic_bytes`` carries the lowering-aware memory term (im2col
+    patch-matrix bytes vs none for the fused direct kernel).
     """
     name = getattr(stage, "name", type(stage).__name__)
     b_a = int(getattr(stage, "in_bits", 8))
     bank = getattr(stage, "stage", None)        # ThresholdDense, if fused
     b_w = int(getattr(bank, "weight_bits", 8))
     geom = getattr(stage, "geom", None)
+    traffic = stage_traffic_bytes(stage)
     if geom is not None:                        # FusedConvThresholdStage
-        return conv_cost(name, geom.in_ch, geom.out_ch, geom.kernel,
-                         geom.out_h, geom.out_w, b_a, b_w, bias=False)
+        c = conv_cost(name, geom.in_ch, geom.out_ch, geom.kernel,
+                      geom.out_h, geom.out_w, b_a, b_w, bias=False)
+        c.traffic_bytes = traffic
+        return c
     w = getattr(stage, "w", None)               # FloatHeadStage
     if bank is not None or w is not None:
-        return dense_cost(name, int(stage.in_dim), int(stage.out_dim),
-                          b_a, b_w, bias=w is not None)
+        c = dense_cost(name, int(stage.in_dim), int(stage.out_dim),
+                       b_a, b_w, bias=w is not None)
+        c.traffic_bytes = traffic
+        return c
     # pool / flatten / fallback chains: no MACs, just movement
-    return LayerCost(name=name, bops=0.0, wm_bits=0, flops=0.0, n_params=0)
+    return LayerCost(name=name, bops=0.0, wm_bits=0, flops=0.0, n_params=0,
+                     traffic_bytes=traffic)
 
 
 def schedule_cost(stages: Iterable) -> ModelCost:

@@ -10,7 +10,9 @@ the MLPerf Tiny load scenarios (``scenarios``).
 What actually lowers to fused integer stages:
 
   * ``Dense  -> [BatchNorm] -> Relu -> Quant``  -> multi-threshold matmul
-  * ``Conv2D -> [BatchNorm] -> Relu -> Quant``  -> im2col + the same kernel
+  * ``Conv2D -> [BatchNorm] -> Relu -> Quant``  -> fused direct-conv kernel
+    (implicit im2col, thresholds in-register; ``conv_lowering="im2col"`` or
+    REPRO_CONV_LOWERING=im2col falls back to patch-matrix + threshold_matmul)
   * ``Dense|Conv2D -> Quant(bipolar)``          -> single-threshold sign bank
     (the binary CNV path)
   * ``MaxPool`` / ``Flatten``                   -> integer pool / reshape
@@ -33,8 +35,10 @@ from repro.deploy.executor import (  # noqa: F401
     compile_graph,
 )
 from repro.deploy.lower import (  # noqa: F401
+    CONV_LOWERINGS,
     ChainMatch,
     ConvGeom,
+    default_conv_lowering,
     FlattenStage,
     FloatHeadStage,
     FusedConvThresholdStage,

@@ -5,8 +5,10 @@ Two execution modes mirror the paper's deployment measurements:
 
   * **offline**  — the whole stage schedule compiled into a single XLA
     program over the full batch (max throughput; MLPerf Offline). Fused
-    integer stages run on the Pallas ``threshold_matmul`` kernel on TPU and
-    as the XLA-fused jnp reference otherwise (same integers either way).
+    integer stages run on the Pallas kernels on TPU — ``threshold_matmul``
+    for dense stages, the fused direct-conv ``conv_threshold`` (no
+    materialized im2col) for conv stages lowered ``direct`` — and as the
+    XLA-fused jnp reference otherwise (same integers either way).
   * **streaming** — the batch is cut into micro-batches that flow through
     per-stage programs connected by bounded queues. The queue capacities are
     *decided* by ``core.dataflow.optimize_fifo_depths`` — the paper's
@@ -152,19 +154,25 @@ class CompiledTinyModel:
     def plan_streaming(self, n_micro: int) -> Tuple[List[int], int]:
         """Size the inter-stage queues with the paper's FIFO pass.
 
-        Each stage's simulated latency is proportional to its work — MACs
-        for dense stages, output tiles times the im2col patch size for conv
-        stages (``macs`` on each stage class) — so rate mismatches between
-        wide and narrow layers show up as occupancy, exactly what the RTL
-        simulation measured on the FPGA.
+        Each stage's simulated latency is proportional to its work,
+        parameterized on the lowering kind: MACs for dense stages, im2col
+        tile counts (output tiles x patch size) for ``im2col`` conv stages,
+        but only *output* tiles for ``direct`` fused conv stages — the
+        fused kernel never emits patch tiles into the pipeline, so sizing
+        its FIFOs from im2col counts would over-buffer (``fifo_work`` on
+        each stage class). Rate mismatches between wide and narrow layers
+        then show up as occupancy, exactly what the RTL simulation measured
+        on the FPGA.
         """
         sim = []
         for s in self.schedule.stages:
-            macs = getattr(s, "macs", None)
-            if macs is None:
-                macs = s.in_dim * s.out_dim
+            work = getattr(s, "fifo_work", None)
+            if work is None:
+                work = getattr(s, "macs", None)
+            if work is None:
+                work = s.in_dim * s.out_dim
             sim.append(SimStage(name=s.name, ii=1,
-                                latency=max(1, macs // 8192) + 1,
+                                latency=max(1, work // 8192) + 1,
                                 elems_in=1, elems_out=1))
         res = optimize_fifo_depths(sim, n_tokens=n_micro)
         return list(res["optimized_depths"]), int(res["optimized_cycles"])
@@ -219,9 +227,16 @@ class CompiledTinyModel:
 
 def compile_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
                   use_pallas: Optional[bool] = None,
-                  interpret: Optional[bool] = None) -> CompiledTinyModel:
-    """The one-call deployment entry point: QIR json graph -> executor."""
-    schedule = lower_graph(graph, in_scale=in_scale)
+                  interpret: Optional[bool] = None,
+                  conv_lowering: Optional[str] = None) -> CompiledTinyModel:
+    """The one-call deployment entry point: QIR json graph -> executor.
+
+    ``conv_lowering`` picks the conv stage algorithm ("direct" fused kernel
+    by default, "im2col" fallback) for both offline and streaming modes —
+    the stage methods the executor dispatches through carry the choice.
+    """
+    schedule = lower_graph(graph, in_scale=in_scale,
+                           conv_lowering=conv_lowering)
     return CompiledTinyModel(schedule, graph=graph, use_pallas=use_pallas,
                              interpret=interpret)
 

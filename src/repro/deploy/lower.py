@@ -18,10 +18,22 @@ Stage kinds covering every exported graph:
   * ``FusedThresholdStage``     — streamlined integer dense stage; runs on
     the fused Pallas kernel (``kernels.ops.threshold_matmul``) on TPU, or as
     the XLA-fused searchsorted reference inside the same jit program on CPU.
-  * ``FusedConvThresholdStage`` — streamlined integer conv stage: im2col
-    patch extraction feeding the *same* threshold-matmul, with the bank
-    built by ``core.streamline`` (BN folded into the kernel, exact half-up
-    rounding; FINN-style bipolar sign banks for the binary CNV).
+  * ``FusedConvThresholdStage`` — streamlined integer conv stage, with the
+    bank built by ``core.streamline`` (BN folded into the kernel, exact
+    half-up rounding; FINN-style bipolar sign banks for the binary CNV).
+    Two lowerings share the one stage artifact, selected by ``lowering``:
+
+      - ``"direct"`` (default) — the fused direct-conv Pallas kernel
+        (``kernels.ops.conv_threshold``): implicit im2col via shifted-window
+        tap accumulation inside the kernel, thresholds in-register, no
+        materialized patch matrix. The CPU fast path is XLA's native conv
+        (``mm_float``) or the same tap accumulation in int32.
+      - ``"im2col"``  — fallback behind ``conv_lowering="im2col"`` /
+        ``REPRO_CONV_LOWERING=im2col``: materialize the (OH*OW, K*K*C)
+        patch matrix and ride the dense ``threshold_matmul``.
+
+    Both produce identical integers (integer accumulation is order-free),
+    so the bit-exactness contract is lowering-independent.
   * ``IntPoolStage``            — MaxPool on integer codes (max commutes
     with the monotone code -> value map, so pooling codes is exact).
   * ``FlattenStage``            — NHWC -> flat reshape between conv and FC.
@@ -38,6 +50,7 @@ stages compose exactly.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
@@ -69,13 +82,13 @@ def im2col(x, kernel: int, stride: int, padding: str):
     exact on integer codes whenever code 0 means value 0 (signed inputs and
     unsigned half-up codes — the bipolar CNV uses VALID convs only).
     """
+    from repro.kernels.conv_threshold import same_pads
+
     n, h, w, c = x.shape
     if padding == "SAME":
         oh, ow = -(-h // stride), -(-w // stride)
-        ph = max((oh - 1) * stride + kernel - h, 0)
-        pw = max((ow - 1) * stride + kernel - w, 0)
-        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
-                        (pw // 2, pw - pw // 2), (0, 0)))
+        pad_h, pad_w = same_pads(h, w, oh, ow, stride, kernel)
+        x = jnp.pad(x, ((0, 0), pad_h, pad_w, (0, 0)))
     else:
         oh, ow = (h - kernel) // stride + 1, (w - kernel) // stride + 1
     cols = [x[:, i:i + stride * (oh - 1) + 1:stride,
@@ -183,14 +196,27 @@ class ConvGeom:
     out_ch: int
 
 
+CONV_LOWERINGS = ("direct", "im2col")
+
+
+def default_conv_lowering() -> str:
+    """The preferred conv lowering, overridable via REPRO_CONV_LOWERING."""
+    kind = os.environ.get("REPRO_CONV_LOWERING", "direct").strip() or "direct"
+    if kind not in CONV_LOWERINGS:
+        raise ValueError(
+            f"REPRO_CONV_LOWERING={kind!r}; expected one of {CONV_LOWERINGS}")
+    return kind
+
+
 @dataclasses.dataclass
 class FusedConvThresholdStage:
-    """One streamlined integer conv stage: im2col + threshold matmul.
+    """One streamlined integer conv stage (direct or im2col lowering).
 
     ``stage.w_int`` holds the (kernel*kernel*in_ch, out_ch) im2col weight
     matrix; the integer accumulator and threshold bank are identical to the
-    dense case, so the Pallas kernel and the searchsorted CPU path are
-    shared with ``FusedThresholdStage``.
+    dense case, so both lowerings — the fused direct-conv kernel and the
+    im2col + ``threshold_matmul`` fallback — consume one stage artifact and
+    produce identical integers.
     """
 
     name: str
@@ -200,6 +226,7 @@ class FusedConvThresholdStage:
     in_bits: int = 8
     mm_float: bool = False   # exact float32 GEMM path (see _float_mm_safe)
     affine: Optional[tuple] = None   # exact O(1) activation (see _apply_act)
+    lowering: str = "direct"         # "direct" | "im2col"
 
     @property
     def out_scale(self) -> float:
@@ -218,6 +245,33 @@ class FusedConvThresholdStage:
         g = self.geom
         return g.out_h * g.out_w * g.kernel * g.kernel * g.in_ch * g.out_ch
 
+    @property
+    def fifo_work(self) -> int:
+        """Per-token work driving the FIFO-depth simulation.
+
+        The im2col lowering materializes (OH*OW, K*K*C) patch tiles, so its
+        pipeline work scales with the patch traffic (= ``macs``). The fused
+        direct kernel streams shifted windows in-register and emits only
+        output tiles, so its FIFO pressure scales with the output tile
+        count — sizing fused-stage FIFOs from im2col tile counts would
+        over-buffer them (paper §3.1.2: depth follows observed occupancy).
+        """
+        g = self.geom
+        if self.lowering == "direct":
+            return g.out_h * g.out_w * g.out_ch
+        return self.macs
+
+    def _pad_same(self, x):
+        """SAME zero padding on integer codes (exact: code 0 is value 0)."""
+        from repro.kernels.conv_threshold import same_pads
+
+        g = self.geom
+        if g.padding != "SAME":
+            return x
+        pad_h, pad_w = same_pads(g.in_h, g.in_w, g.out_h, g.out_w,
+                                 g.stride, g.kernel)
+        return jnp.pad(x, ((0, 0), pad_h, pad_w, (0, 0)))
+
     def _cols2d(self, x_int):
         g = self.geom
         x = x_int.reshape(-1, g.in_h, g.in_w, g.in_ch)
@@ -235,27 +289,56 @@ class FusedConvThresholdStage:
                                x_int.shape[0])
 
     def apply_fast(self, x_int):
-        """CPU/XLA path. With the exactness bound satisfied the accumulator
-        comes from XLA's native float32 convolution (integer-valued, so
-        bit-identical to the int32 im2col matmul but Eigen-optimized);
-        otherwise we im2col and accumulate in int32."""
+        """CPU/XLA path, algorithm selected by ``lowering``.
+
+        * ``direct``  — no patch matrix ever: with the exactness bound
+          satisfied the accumulator comes from XLA's native float32
+          convolution (integer-valued, so bit-identical to the int32 path
+          but Eigen-optimized); otherwise the kernel's shifted-window tap
+          accumulation runs in int32.
+        * ``im2col``  — materialize the patch matrix and matmul (float32
+          SGEMM when the bound allows, int32 otherwise) — the baseline the
+          fused kernel is benchmarked against.
+        """
         g = self.geom
-        if self.mm_float:
-            x = x_int.reshape(-1, g.in_h, g.in_w, g.in_ch).astype(jnp.float32)
-            w4 = self.stage.w_int.astype(jnp.float32).reshape(
-                g.kernel, g.kernel, g.in_ch, g.out_ch)
-            acc = jax.lax.conv_general_dilated(
-                x, w4, (g.stride, g.stride), g.padding,
-                dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(jnp.int32)
+        if self.lowering == "direct":
+            x = x_int.reshape(-1, g.in_h, g.in_w, g.in_ch)
+            if self.mm_float:
+                w4 = self.stage.w_int.astype(jnp.float32).reshape(
+                    g.kernel, g.kernel, g.in_ch, g.out_ch)
+                acc = jax.lax.conv_general_dilated(
+                    x.astype(jnp.float32), w4, (g.stride, g.stride),
+                    g.padding,
+                    dimension_numbers=("NHWC", "HWIO", "NHWC")
+                ).astype(jnp.int32)
+            else:
+                from repro.kernels.conv_threshold import direct_conv_acc
+
+                acc = direct_conv_acc(
+                    self._pad_same(x), self.stage.w_int, kernel=g.kernel,
+                    stride=g.stride, out_h=g.out_h, out_w=g.out_w)
             return _apply_act(self.stage, self.affine, acc)
-        acc = jnp.matmul(self._cols2d(x_int).astype(jnp.int32),
-                         self.stage.w_int.astype(jnp.int32))
+        cols = self._cols2d(x_int)
+        if self.mm_float:
+            acc = jnp.matmul(cols.astype(jnp.float32),
+                             self.stage.w_int.astype(jnp.float32)
+                             ).astype(jnp.int32)
+        else:
+            acc = jnp.matmul(cols.astype(jnp.int32),
+                             self.stage.w_int.astype(jnp.int32))
         return self._shape_out(
             _apply_act(self.stage, self.affine, acc), x_int.shape[0])
 
     def apply_kernel(self, x_int, *, interpret: Optional[bool] = None):
         from repro.kernels import ops
 
+        g = self.geom
+        if self.lowering == "direct":
+            x = x_int.reshape(-1, g.in_h, g.in_w, g.in_ch)
+            return ops.conv_threshold(
+                x.astype(jnp.int32), self.stage.w_int, self.stage.thresholds,
+                kernel=g.kernel, stride=g.stride, padding=g.padding,
+                out_h=g.out_h, out_w=g.out_w, interpret=interpret)
         y = ops.threshold_matmul(
             self._cols2d(x_int).astype(jnp.int32), self.stage.w_int,
             self.stage.thresholds, interpret=interpret)
@@ -419,6 +502,8 @@ class StageSchedule:
                 f"in_scale={self.in_scale:g})"]
         for s in self.stages:
             kind = type(s).__name__
+            if isinstance(s, FusedConvThresholdStage):
+                kind += f"[{s.lowering}]"
             rows.append(f"  {s.name:16s} {kind:24s} {s.in_dim:>6d} -> {s.out_dim}")
         return "\n".join(rows)
 
@@ -601,7 +686,8 @@ def _exact_affine(m: ChainMatch, td: ThresholdDense, scale: float,
 
 
 def stage_for(m: ChainMatch, scale: float, in_bits: int = 8,
-              bn_eps: float = 1e-3) -> Stage:
+              bn_eps: float = 1e-3,
+              conv_lowering: Optional[str] = None) -> Stage:
     """Build the fused stage for one matched chain — the op dispatch point."""
     td = _threshold_for_chain(m, scale, bn_eps)
     mm_float = _float_mm_safe(td.w_int, in_bits)
@@ -615,9 +701,14 @@ def stage_for(m: ChainMatch, scale: float, in_bits: int = 8,
                         padding=a.get("padding", "SAME"),
                         in_h=int(ih), in_w=int(iw), in_ch=int(ic),
                         out_h=int(oh), out_w=int(ow), out_ch=int(oc))
+        kind = conv_lowering or default_conv_lowering()
+        if kind not in CONV_LOWERINGS:
+            raise ValueError(f"conv_lowering={kind!r}; "
+                             f"expected one of {CONV_LOWERINGS}")
         return FusedConvThresholdStage(name=m.head.name, stage=td, geom=geom,
                                        in_scale=scale, in_bits=in_bits,
-                                       mm_float=mm_float, affine=affine)
+                                       mm_float=mm_float, affine=affine,
+                                       lowering=kind)
     w = m.params["w"]
     return FusedThresholdStage(name=m.head.name, stage=td,
                                in_dim=int(w.shape[0]),
@@ -627,12 +718,16 @@ def stage_for(m: ChainMatch, scale: float, in_bits: int = 8,
 
 
 def lower_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
-                bn_eps: float = 1e-3) -> StageSchedule:
+                bn_eps: float = 1e-3,
+                conv_lowering: Optional[str] = None) -> StageSchedule:
     """Compile a QIR graph to a stage schedule.
 
     ``in_scale`` is the float value of one integer step of the (already
     quantized) network input — the paper's 8-bit input layer contract.
     Conv exporters record their contract in ``graph.meta["in_scale"]``.
+    ``conv_lowering`` selects the conv stage algorithm ("direct" fused
+    kernel by default, "im2col" fallback); None defers to the
+    REPRO_CONV_LOWERING environment override.
     """
     stages: List[Stage] = []
     nodes = graph.nodes
@@ -642,7 +737,8 @@ def lower_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
     while i < len(nodes):
         m = _match_chain(graph, nodes, i)
         if m is not None:
-            st = stage_for(m, scale, in_bits, bn_eps)
+            st = stage_for(m, scale, in_bits, bn_eps,
+                           conv_lowering=conv_lowering)
             stages.append(st)
             scale = st.out_scale
             in_bits = st.stage.act_bits

@@ -3,6 +3,9 @@
 #                     ->requant), the merged-stage form of C2+C3
 #   multi_threshold - FINN integer multi-threshold activation (C2), plus the
 #                     fully fused threshold_matmul stage
+#   conv_threshold  - fused direct-conv stage: implicit im2col (shifted-
+#                     window tap accumulation) + in-register thresholds —
+#                     the paper's streaming conv dataflow, no patch matrix
 #   flash_attention - VMEM-resident online-softmax attention (C4's "keep the
 #                     working set on chip" applied to the LM archs)
 # ops.py holds the jit'd public wrappers (padding + CPU interpret fallback);

@@ -1,0 +1,165 @@
+"""Fused direct-conv + multi-threshold Pallas kernel (no materialized im2col).
+
+The paper's FPGA dataflow convs never materialize an im2col matrix: line
+buffers stream shifted input windows straight into the MAC array and the
+activation happens before anything leaves the chip. This kernel is that
+design on the TPU: for one NHWC input tile it performs *implicit* im2col —
+a static K x K tap loop where every tap contributes one shifted-window
+(rows, C) x (C, F) matmul into an int32 accumulator held in VMEM/registers —
+then applies the per-channel multi-threshold activation in-register and
+writes back only the integer output codes. Versus the im2col lowering
+(``deploy.lower`` building the (OH*OW, K*K*C) patch matrix and feeding
+``threshold_matmul``) this removes the O(K^2*C) memory blow-up per conv
+stage entirely: HBM sees the input once, the weights once, and the output
+once.
+
+Weight layout is shared with the im2col path: ``w2d`` is the
+(kh*kw*cin, cout) matrix of ``core.streamline.ThresholdDense`` with feature
+order (kh, kw, c) row-major, so tap (kh, kw) owns the contiguous row block
+``[(kh*K + kw)*C, (kh*K + kw + 1)*C)``. One stage artifact serves both
+lowerings, which is what makes the bit-exactness tests cheap.
+
+Grid: ``(N, OH_padded // block_h)`` — one program per sample per block of
+output rows. The host wrapper (``kernels.ops.conv_threshold``) zero-pads the
+input spatially (SAME padding plus bottom rows so the row-block grid
+divides; zero padding is exact on integer codes whenever code 0 means value
+0 — the export contract) and picks ``block_h`` from the output-tile shape.
+Channels ride whole in VMEM like ``multi_threshold`` does — tiny-model
+channel counts are 3..512.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+
+def same_pads(h: int, w: int, out_h: int, out_w: int, stride: int,
+              kernel: int):
+    """XLA/TF SAME zero-pad widths: ((low_h, high_h), (low_w, high_w)).
+
+    Low side gets floor(pad/2). Single source of truth for every conv path
+    (im2col, direct CPU, Pallas host wrapper) — the bit-exactness contract
+    between the lowerings depends on identical pad splits.
+    """
+    ph = max((out_h - 1) * stride + kernel - h, 0)
+    pw = max((out_w - 1) * stride + kernel - w, 0)
+    return (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2)
+
+
+def _conv_thr_kernel(x_ref, w_ref, thr_ref, o_ref, *, kernel: int,
+                     stride: int, block_h: int, out_w: int, in_ch: int,
+                     n_steps: int):
+    """One (sample, output-row-block) program.
+
+    x_ref:   (1, HP, WP, C) int32 — the whole padded sample
+    w_ref:   (K*K*C, F)     int   — shared im2col weight layout
+    thr_ref: (S, F)         int32 — threshold bank, steps-major
+    o_ref:   (1, block_h, OW, F)  int32 output codes
+    """
+    j = pl.program_id(1)
+    x = x_ref[0]                                   # (HP, WP, C)
+    rh = (block_h - 1) * stride + 1                # input rows per tap slice
+    rw = (out_w - 1) * stride + 1
+    acc = jnp.zeros((block_h * out_w, w_ref.shape[1]), jnp.int32)
+    for kh in range(kernel):                       # static K x K tap loop
+        for kw in range(kernel):
+            row0 = j * (block_h * stride) + kh     # dynamic (grid) row start
+            xs = jax.lax.dynamic_slice(x, (row0, kw, 0), (rh, rw, in_ch))
+            if stride > 1:
+                xs = xs[::stride, ::stride, :]     # static strided decimation
+            tap = (kh * kernel + kw) * in_ch
+            w_tap = w_ref[tap:tap + in_ch, :].astype(jnp.int32)
+            acc += jax.lax.dot_general(
+                xs.reshape(block_h * out_w, in_ch), w_tap,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+
+    out = jnp.zeros_like(acc)
+
+    def body(s, out):
+        t = jax.lax.dynamic_slice_in_dim(thr_ref[...], s, 1, axis=0)  # (1, F)
+        return out + (acc >= t).astype(jnp.int32)
+
+    out = jax.lax.fori_loop(0, n_steps, body, out)
+    o_ref[0] = out.reshape(block_h, out_w, w_ref.shape[1])
+
+
+def conv_threshold(
+    x_pad: jnp.ndarray,            # (N, HP, WP, C) int32, already zero-padded
+    w2d: jnp.ndarray,              # (K*K*C, F) int8/int32, (kh, kw, c)-major
+    thresholds: jnp.ndarray,       # (F, S) int32, sorted along S
+    *,
+    kernel: int,
+    stride: int,
+    out_h: int,                    # unpadded output rows wanted
+    out_w: int,
+    block_h: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """One whole streamlined conv stage in a single kernel.
+
+    Requires ``out_h % block_h == 0`` and the input padded tall enough for
+    the last row block: ``HP >= (out_h - 1) * stride + kernel`` (the host
+    wrapper guarantees both). Returns (N, out_h, out_w, F) int32 codes.
+    """
+    n, hp, wp, c = x_pad.shape
+    f = w2d.shape[1]
+    s = thresholds.shape[1]
+    assert w2d.shape[0] == kernel * kernel * c, (w2d.shape, kernel, c)
+    assert thresholds.shape[0] == f
+    assert out_h % block_h == 0, (out_h, block_h)
+    assert hp >= (out_h - 1) * stride + kernel, (hp, out_h, stride, kernel)
+    assert wp >= (out_w - 1) * stride + kernel, (wp, out_w, stride, kernel)
+    thr_t = thresholds.T.astype(jnp.int32)         # (S, F): lanes = channels
+
+    return pl.pallas_call(
+        functools.partial(
+            _conv_thr_kernel, kernel=kernel, stride=stride, block_h=block_h,
+            out_w=out_w, in_ch=c, n_steps=s),
+        grid=(n, out_h // block_h),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((kernel * kernel * c, f), lambda i, j: (0, 0)),
+            pl.BlockSpec((s, f), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_h, out_w, f),
+                               lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, out_h, out_w, f), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x_pad.astype(jnp.int32), w2d, thr_t)
+
+
+def direct_conv_acc(x_pad: jnp.ndarray, w2d: jnp.ndarray, *, kernel: int,
+                    stride: int, out_h: int, out_w: int,
+                    as_float: bool = False) -> jnp.ndarray:
+    """The kernel's accumulator as plain jnp — shifted-window tap sums, no
+    materialized patch matrix. CPU/XLA fast path and the oracle the Pallas
+    kernel is tested against.
+
+    With ``as_float`` the taps accumulate in float32 (exact for integer
+    values while partial sums stay below 2^24 — the ``_float_mm_safe``
+    bound), which takes the SGEMM path on CPU. Returns (N, out_h, out_w, F)
+    int32.
+    """
+    n, hp, wp, c = x_pad.shape
+    rh = (out_h - 1) * stride + 1
+    rw = (out_w - 1) * stride + 1
+    dt = jnp.float32 if as_float else jnp.int32
+    x = x_pad.astype(dt)
+    acc = jnp.zeros((n, out_h, out_w, w2d.shape[1]), dt)
+    for kh in range(kernel):
+        for kw in range(kernel):
+            xs = x[:, kh:kh + rh:stride, kw:kw + rw:stride, :]
+            tap = (kh * kernel + kw) * c
+            acc = acc + xs @ w2d[tap:tap + c, :].astype(dt)
+    return acc.astype(jnp.int32)

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import conv_threshold as _ct
 from repro.kernels import flash_attention as _fa
 from repro.kernels import multi_threshold as _mt
 from repro.kernels import qmatmul as _qm
@@ -100,6 +101,63 @@ def threshold_matmul(x_int, w_int, thresholds, *, block_m=128, block_n=128,
                              block_k=min(block_k, x_p.shape[1]),
                              interpret=interp)
     return y[:M0, :N0]
+
+
+def plan_conv_blocks(out_h: int, out_w: int, out_ch: int,
+                     target_rows: int = 256,
+                     acc_budget_bytes: int = 1 << 21) -> int:
+    """Pick the output-row block for the fused direct-conv kernel.
+
+    Autotuned from the *output tile* shape: enough rows that each program's
+    flattened matmul M dimension (``block_h * out_w``) approaches
+    ``target_rows`` (keeps the MXU busy), capped so the int32 accumulator
+    block (``block_h * out_w * out_ch * 4`` bytes) stays inside a VMEM
+    budget. Always at least 1 row; never more than ``out_h``.
+    """
+    block_h = max(1, min(out_h, target_rows // max(out_w, 1)))
+    while (block_h > 1
+           and block_h * out_w * max(out_ch, 1) * 4 > acc_budget_bytes):
+        block_h -= 1
+    return block_h
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "stride", "padding",
+                                             "out_h", "out_w", "block_h",
+                                             "interpret"))
+def conv_threshold(x_int, w2d, thresholds, *, kernel: int, stride: int,
+                   padding: str, out_h: int, out_w: int,
+                   block_h: Optional[int] = None,
+                   interpret: Optional[bool] = None):
+    """Fused direct-conv integer stage: NHWC codes -> threshold codes.
+
+    Implicit im2col inside the Pallas kernel (shifted-window tap
+    accumulation; see ``kernels.conv_threshold``) — the (OH*OW, K*K*C) patch
+    matrix is never materialized. Handles SAME/VALID zero padding on the
+    host (exact on integer codes whenever code 0 means value 0, the export
+    contract), pads output rows so the row-block grid divides, and restores
+    the unpadded shape. ``w2d`` is the (kh*kw*cin, cout) im2col weight
+    matrix, ``thresholds`` the (cout, S) bank — the same stage artifact the
+    im2col lowering feeds ``threshold_matmul``.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    n, h, w, c = x_int.shape
+    if padding == "SAME":
+        pad_h, pad_w = _ct.same_pads(h, w, out_h, out_w, stride, kernel)
+        pads = ((0, 0), pad_h, pad_w, (0, 0))
+    else:
+        pads = ((0, 0), (0, 0), (0, 0), (0, 0))
+    bh = plan_conv_blocks(out_h, out_w, w2d.shape[1]) \
+        if block_h is None else min(block_h, out_h)
+    oh_pad = -(-out_h // bh) * bh
+    # extra zero rows so the padded grid's last block stays in bounds
+    extra = ((oh_pad - 1) * stride + kernel) - (h + pads[1][0] + pads[1][1])
+    if extra > 0:
+        pads = (pads[0], (pads[1][0], pads[1][1] + extra), pads[2], pads[3])
+    x_p = jnp.pad(x_int.astype(jnp.int32), pads)
+    y = _ct.conv_threshold(x_p, w2d, thresholds, kernel=kernel,
+                           stride=stride, out_h=oh_pad, out_w=out_w,
+                           block_h=bh, interpret=interp)
+    return y[:, :out_h]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",

@@ -1,0 +1,90 @@
+"""Regenerate the golden compiled-path fixtures.
+
+    PYTHONPATH=src python tests/golden/generate.py
+
+For each of the four Table-1 model families this freezes (a) the exported
+QIR graph json and (b) the compiled executor's per-stage outputs on a fixed
+input batch, so compiled-path bit-exactness cannot silently regress: the
+regression test (``tests/test_golden.py``) recompiles the *frozen* graph —
+weights included, no RNG in the loop — and compares integers exactly.
+
+Small instances of each architecture keep the fixtures a few hundred KB
+while covering every stage kind the compiler emits (dense/conv threshold
+stages in both halfup and bipolar flavors, pool, flatten, float head).
+Regenerate only when the export contract itself changes, and say why in
+the commit message.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+MODELS = ("kws", "ad", "ic", "cnv")
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def build(name):
+    """(graph, x_int) for one golden model — all randomness fixed-seed."""
+    from repro.core.qir import export_qcnn, export_qmlp
+    from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
+
+    rng = np.random.default_rng(2022)       # paper year; arbitrary but fixed
+    if name == "kws":
+        model = KWSMLP(width=32)
+        params = model.init(jax.random.PRNGKey(10))
+        hidden, _ = model.layers()
+        graph = export_qmlp(hidden, params["hidden"], params["head"],
+                            meta={"model": "KWSMLP", "golden": name},
+                            freeze_scales=True, in_scale=1.0 / 127.0)
+        graph.meta["in_scale"] = 1.0 / 127.0
+        x = rng.integers(-127, 128, (4, 490)).astype(np.int32)
+    elif name == "ad":
+        model = ADAutoencoder(width=24)
+        params = model.init(jax.random.PRNGKey(11))
+        hidden, _ = model.layers()
+        graph = export_qmlp(hidden, params["hidden"], params["head"],
+                            meta={"model": "ADAutoencoder", "golden": name},
+                            freeze_scales=True, in_scale=1.0 / 127.0)
+        graph.meta["in_scale"] = 1.0 / 127.0
+        x = rng.integers(-127, 128, (4, 128)).astype(np.int32)
+    elif name == "ic":
+        model = ICModel(in_hw=16)
+        params = model.init(jax.random.PRNGKey(12))
+        cal = rng.integers(-127, 128, (8, 16, 16, 3)).astype(np.int32)
+        graph = export_qcnn(model, params, calibrate=cal,
+                            meta={"golden": name})
+        x = rng.integers(-127, 128, (4, 16, 16, 3)).astype(np.int32)
+    elif name == "cnv":
+        model = CNVModel(channels=(8, 8, 16, 16, 32, 32), fc=(32, 32))
+        params = model.init(jax.random.PRNGKey(13))
+        graph = export_qcnn(model, params, meta={"golden": name})
+        x = rng.integers(-127, 128, (4, 32, 32, 3)).astype(np.int32)
+    else:
+        raise KeyError(name)
+    return graph, x
+
+
+def main():
+    from repro.deploy import compile_graph
+
+    for name in MODELS:
+        graph, x = build(name)
+        cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                           use_pallas=False, conv_lowering="direct")
+        outs = cm.stage_outputs(x)
+        arrays = {"x": x}
+        for i, o in enumerate(outs):
+            arrays[f"stage_{i:02d}"] = np.asarray(o)
+        graph.save(os.path.join(HERE, f"{name}.qir.json"))
+        np.savez_compressed(os.path.join(HERE, f"{name}.golden.npz"),
+                            **arrays)
+        kinds = [type(s).__name__ for s in cm.schedule.stages]
+        print(f"{name}: {len(outs)} stages {kinds} "
+              f"logits_shape={arrays[f'stage_{len(outs)-1:02d}'].shape}")
+
+
+if __name__ == "__main__":
+    main()
