@@ -1,8 +1,13 @@
-"""Shared benchmark utilities: wall-clock timing of jitted callables and
-uniform row formatting (name, us_per_call, derived)."""
+"""Shared benchmark utilities: wall-clock timing of jitted callables,
+uniform row formatting (name, us_per_call, derived), and machine-readable
+artifact emission (``BENCH_*.json``) so the perf trajectory is tracked
+across PRs instead of living only in stdout."""
 
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 from typing import Any, Callable, Dict, List
 
@@ -34,3 +39,30 @@ def print_rows(rows: List[Dict[str, Any]]):
 
 def banner(title: str):
     print(f"\n=== {title} " + "=" * max(0, 70 - len(title)))
+
+
+def bench_dir() -> str:
+    """Where BENCH_*.json artifacts land (CI uploads them from here)."""
+    return os.environ.get("REPRO_BENCH_DIR", ".")
+
+
+def emit_json(name: str, payload: Dict[str, Any]) -> str:
+    """Write one machine-readable benchmark artifact.
+
+    ``payload`` gets a schema version and the platform fingerprint attached
+    so artifacts from different machines/PRs are comparable. Returns the
+    path written."""
+    os.makedirs(bench_dir(), exist_ok=True)
+    path = os.path.join(bench_dir(), name)
+    doc = {
+        "schema": 1,
+        "backend": jax.default_backend(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        **payload,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    print(f"wrote {path}")
+    return path

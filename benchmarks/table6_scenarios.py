@@ -26,9 +26,17 @@ threshold_matmul), with the lowering-aware traffic model
 (``ModelCost.traffic_bytes``) printed next to the measured speedup and
 bit-exactness asserted between the two.
 
-Also prints the FIFO-sized streaming schedule for KWS and CNV (the §3.1.2
-depths feeding a real execution) and a multi-tenant section where all four
-models share one ``TinyModelServer`` queue.
+The streaming section runs every model through BOTH streaming executors —
+the compiled segment-wave path (``streaming_compiled``: one jit program per
+segment wave, no host loop) and the host queue-loop reference
+(``streaming_host``) — at the micro-batch the FIFO-model autotuner
+(``deploy.autotune``) picked, asserts the three-way bit-equality
+(offline == host == compiled), and reports the compiled-vs-host speedup
+next to the tuned micro-batch / conv ``block_h`` and the modeled FIFO
+cycles / traffic bytes that chose them.
+
+Everything is also emitted machine-readable to ``BENCH_scenarios.json``
+(``REPRO_BENCH_DIR``) so the perf trajectory is tracked across PRs.
 
 Set REPRO_FAST=1 for a reduced-size pass (CI / smoke).
 """
@@ -42,10 +50,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import banner, print_rows, row
+from benchmarks.common import banner, emit_json, print_rows, row
 from repro.core.bops import schedule_cost
 from repro.core.qir import export_qcnn, export_qmlp
 from repro.deploy import compile_graph
+from repro.deploy.autotune import autotune_model, probe_streaming
 from repro.deploy.scenarios import offline, single_stream
 from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
 from repro.serving.engine import TinyModelServer
@@ -72,7 +81,7 @@ def _compile_conv(model, key, rng, conv_lowering=None):
                          use_pallas=False, conv_lowering=conv_lowering)
 
 
-def _time_offline(fn, xb, iters: int = 3) -> float:
+def _time_offline(fn, xb, iters: int = 5) -> float:
     """Median queries/sec of fn over the batch."""
     jax.block_until_ready(fn(xb))
     times = []
@@ -82,6 +91,8 @@ def _time_offline(fn, xb, iters: int = 3) -> float:
         times.append(time.perf_counter() - t0)
     times.sort()
     return xb.shape[0] / times[len(times) // 2]
+
+
 
 
 def run():
@@ -107,6 +118,8 @@ def run():
         entries[name] = (cm, mk, bits)
 
     rows = []
+    scenario_json = {"rows": [], "streaming": [], "tuned": {},
+                     "fast": FAST}
     for name, (cm, mk, bits) in entries.items():
         conv = cm.schedule.n_fused_conv > 0
         cost = schedule_cost(cm.schedule.stages)
@@ -140,6 +153,10 @@ def run():
             fused_conv=cm.schedule.n_fused_conv,
             argmax_parity=parity,
             beats_reference=speedup > 1.0))
+        scenario_json["rows"].append(
+            {"model": name, "single_stream": ss.row(), "offline": off.row(),
+             "unfused_ref_qps": ref_qps, "compiled_speedup": speedup,
+             "argmax_parity": parity})
         if off.stage_ms:
             top = sorted(off.stage_ms, key=lambda s: -s["ms"])[:3]
             print(f"stage_ms[{name}]: " + " ".join(
@@ -167,19 +184,61 @@ def run():
                 im2col_traffic_B=f"{t_i2c:.0f}",
                 im2col_bytes_saved=f"{1 - t_direct / t_i2c:.0%}",
                 beats_im2col=qps_direct > qps_i2c))
-    print_rows(rows)
+            scenario_json["rows"][-1]["conv_lowering"] = {
+                "fused_qps": qps_direct, "im2col_qps": qps_i2c,
+                "fused_traffic_bytes": t_direct,
+                "im2col_traffic_bytes": t_i2c,
+                "beats_im2col": bool(qps_direct > qps_i2c)}
 
-    # -- streaming mode: the FIFO pass feeding real schedules --------------
-    for name, micro in (("KWS-FINN", 8), ("IC-FINN-CNV", 4)):
-        cm, mk, _ = entries[name]
-        n = 16 if FAST else 32
+    # -- streaming: tuned micro-batch, compiled segment waves vs the host
+    #    queue loop, three-way bit-equality asserted --------------------------
+    stream_rows = []
+    for name, (cm, mk, _) in entries.items():
+        conv = cm.schedule.n_fused_conv > 0
+        n = (8 if conv else 16) if FAST else (16 if conv else 32)
+        cfg = autotune_model(cm, batch=n)
+        cm.apply_tuned(cfg)
+        scenario_json["tuned"][name] = cfg.to_dict()
         xb = jnp.asarray(np.stack([mk(i) for i in range(n)]), jnp.int32)
         y_off = cm.offline(xb)
-        y_str, stats = cm.streaming(xb, micro_batch=micro)
-        print(f"streaming[{name}]: fifo_depths={stats.fifo_depths} "
-              f"max_occupancy={stats.max_occupancy} "
-              f"sim_cycles={stats.sim_cycles} "
-              f"matches_offline={bool(jnp.all(y_off == y_str))}")
+        y_cmp, st_c = cm.streaming_compiled(xb)           # tuned micro-batch
+        y_host, st_h = cm.streaming_host(xb, micro_batch=st_c.micro_batch)
+        assert bool(jnp.all(jnp.asarray(y_cmp) == jnp.asarray(y_off))), name
+        assert bool(jnp.all(jnp.asarray(y_host) == jnp.asarray(y_off))), name
+        t_cmp = probe_streaming(cm, xb, st_c.micro_batch, iters=5)
+        t_host = probe_streaming(cm, xb, st_c.micro_batch, iters=5,
+                                 runner=cm.streaming_host)
+        speed = t_host / max(t_cmp, 1e-9)
+        stream_rows.append(row(
+            f"table6/{name}/Streaming", t_cmp * 1e6 / n,
+            compiled_ms=f"{t_cmp * 1e3:.2f}",
+            host_ms=f"{t_host * 1e3:.2f}",
+            compiled_vs_host=f"{speed:.2f}x",
+            tuned_micro_batch=st_c.micro_batch,
+            tuned_block_h=cfg.block_h or "-",
+            modeled_cycles=cfg.modeled_cycles,
+            modeled_traffic_B=f"{cfg.modeled_traffic_bytes:.0f}",
+            fifo_depths=str(st_h.fifo_depths),
+            segments=str(st_c.segments),
+            bit_exact=True))
+        print(f"streaming[{name}]: mb={st_c.micro_batch} "
+              f"block_h={cfg.block_h} fifo_depths={st_h.fifo_depths} "
+              f"max_occupancy={st_h.max_occupancy} "
+              f"sim_cycles={st_h.sim_cycles} "
+              f"compiled_vs_host={speed:.2f}x matches_offline=True")
+        scenario_json["streaming"].append({
+            "model": name, "micro_batch": st_c.micro_batch,
+            "block_h": cfg.block_h,
+            "compiled_ms": t_cmp * 1e3, "host_ms": t_host * 1e3,
+            "compiled_vs_host_speedup": speed,
+            "modeled_cycles": cfg.modeled_cycles,
+            "modeled_traffic_bytes": cfg.modeled_traffic_bytes,
+            "fifo_depths": st_h.fifo_depths,
+            "max_occupancy": st_h.max_occupancy,
+            "segments": st_c.segments,
+            "bit_exact_vs_offline": True})
+    rows += stream_rows
+    print_rows(rows)
 
     # -- multi-tenant: all four models behind one queue --------------------
     server = TinyModelServer({n: e[0] for n, e in entries.items()},
@@ -192,6 +251,9 @@ def run():
     agg = st.pop("_aggregate")
     tenants = " ".join(f"{n}:p99={v['p99_ms']:.1f}ms" for n, v in st.items())
     print(f"multitenant: {agg['n']} reqs {agg['throughput_qps']:.0f} qps  {tenants}")
+    scenario_json["multitenant"] = {"n": agg["n"],
+                                    "throughput_qps": agg["throughput_qps"]}
+    emit_json("BENCH_scenarios.json", scenario_json)
     return rows
 
 

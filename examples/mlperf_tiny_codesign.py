@@ -130,10 +130,15 @@ ss = single_stream(compiled.offline, mk, n_queries=32,
 off = offline_scenario(compiled.offline, mk, n_samples=256,
                        model_cost=cost, bits=scan.chosen_bits)
 xb = jnp.asarray(np.stack([mk(i) for i in range(64)]), jnp.int32)
-y_str, fifo = compiled.streaming(xb, micro_batch=8)
+# compiled segment waves (the hot path) vs the host queue-loop reference:
+# both must match offline bit for bit
+y_cmp, fifo = compiled.streaming_compiled(xb, micro_batch=8)
+y_str, _ = compiled.streaming_host(xb, micro_batch=8)
+assert bool(jnp.all(compiled.offline(xb) == y_cmp))
 assert bool(jnp.all(compiled.offline(xb) == y_str))
 print(f"    SingleStream: p50={ss.p50_ms:.3f}ms p99={ss.p99_ms:.3f}ms "
       f"(roofline energy proxy {ss.energy_proxy_uJ:.2f}uJ)")
 print(f"    Offline:      {off.throughput_qps:.0f} inf/s (batch {off.extras['batch']})")
 print(f"    Streaming:    fifo_depths={fifo.fifo_depths} "
-      f"(sized by core.dataflow, outputs match offline)")
+      f"segments={fifo.segments} "
+      f"(sized by core.dataflow, compiled waves match offline)")

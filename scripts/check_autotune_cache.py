@@ -1,0 +1,44 @@
+#!/usr/bin/env python
+"""CI check: every cached autotune config round-trips exactly.
+
+For each ``*.json`` in the autotune cache (``REPRO_AUTOTUNE_CACHE``,
+default ``.repro_autotune``): load -> re-save -> the bytes must be
+identical and the parsed ``TunedConfig`` equal. A config that fails to
+round-trip would silently re-tune (or worse, half-apply) on the next run.
+
+Exits non-zero on any mismatch; prints one line per config checked.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.deploy.autotune import TunedConfig, cache_dir  # noqa: E402
+
+
+def main() -> int:
+    paths = sorted(glob.glob(os.path.join(cache_dir(), "*.json")))
+    if not paths:
+        print(f"no autotune configs under {cache_dir()!r} — nothing to check")
+        return 0
+    failures = 0
+    for path in paths:
+        with open(path) as f:
+            raw = f.read()
+        cfg = TunedConfig.from_dict(json.loads(raw))
+        out = json.dumps(cfg.to_dict(), indent=2, sort_keys=True) + "\n"
+        ok = (json.loads(out) == json.loads(raw)
+              and TunedConfig.from_dict(json.loads(out)) == cfg)
+        print(f"{'ok  ' if ok else 'FAIL'} {path} "
+              f"(micro_batch={cfg.micro_batch}, block_h={cfg.block_h})")
+        failures += 0 if ok else 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -117,6 +117,33 @@ class ModelCost:
 # compiled-schedule costing (deploy.lower stage lists)
 # ---------------------------------------------------------------------------
 
+def conv_input_band_bytes(geom, block_h: int) -> float:
+    """Input bytes one query streams through the fused direct-conv kernel at
+    a given output-row block size.
+
+    The kernel fetches per-row-block *bands* of
+    ``(block_h - 1) * stride + kernel`` padded input rows (halo rows
+    duplicated across adjacent bands — the line-buffer overlap), so smaller
+    blocks re-fetch more halo rows while bigger blocks need a bigger VMEM
+    accumulator. This is the byte term the ``block_h`` autotuner minimizes
+    (``deploy.autotune.plan_block_h``) and what ``stage_traffic_bytes``
+    charges a tuned direct stage.
+    """
+    from repro.kernels.conv_threshold import band_rows, same_pads
+
+    bh = max(1, min(int(block_h), geom.out_h))
+    n_blocks = -(-geom.out_h // bh)
+    if geom.padding == "SAME":
+        (_, _), (pw_lo, pw_hi) = same_pads(geom.in_h, geom.in_w, geom.out_h,
+                                           geom.out_w, geom.stride,
+                                           geom.kernel)
+        wp = geom.in_w + pw_lo + pw_hi
+    else:
+        wp = geom.in_w
+    return 4.0 * n_blocks * band_rows(bh, geom.stride, geom.kernel) \
+        * wp * geom.in_ch
+
+
 def stage_traffic_bytes(stage) -> float:
     """Memory-traffic model of one lowered deploy stage, for a single
     batch-1 query (the MLPerf SingleStream unit; batched execution
@@ -146,6 +173,18 @@ def stage_traffic_bytes(stage) -> float:
         patch = (geom.out_h * geom.out_w
                  * geom.kernel * geom.kernel * geom.in_ch)
         io += 2.0 * 4.0 * patch                 # write + read the im2col mat
+    elif geom is not None:
+        # direct lowering always streams per-row-block bands (halo rows
+        # duplicated per block) — tuned block_h or the planner's default —
+        # so the banded fetch replaces the flat input term either way and
+        # tuned vs untuned traffic stays comparable
+        bh = getattr(stage, "block_h", None)
+        if not bh:
+            from repro.kernels.ops import plan_conv_blocks
+
+            bh = plan_conv_blocks(geom.out_h, geom.out_w, geom.out_ch)
+        io += conv_input_band_bytes(geom, bh) \
+            - 4.0 * int(getattr(stage, "in_dim", 0))
     return io + params
 
 

@@ -131,6 +131,38 @@ def optimize_fifo_depths(
     }
 
 
+#: Modeled element throughput of one pipeline stage, elements per simulated
+#: cycle. One simulated cycle stands for "the time a stage needs to chew
+#: through this many accumulator elements"; the absolute value only sets the
+#: cycle unit, the *ratios* between stages are what size the FIFOs.
+STAGE_ELEMS_PER_CYCLE = 8192
+
+#: Fixed per-initiation cost in simulated cycles: the dispatch/launch/sync
+#: overhead a stage pays every time it starts a micro-batch, independent of
+#: the micro-batch size. This is the term that makes tiny micro-batches
+#: expensive (many hops) and is what the micro-batch autotuner trades against
+#: pipeline fill/drain latency (which grows with the micro-batch).
+HOP_OVERHEAD_CYCLES = 8
+
+
+def micro_batch_stage(name: str, work: int, micro_batch: int = 1,
+                      *, elems_per_cycle: int = STAGE_ELEMS_PER_CYCLE,
+                      overhead: int = HOP_OVERHEAD_CYCLES) -> Stage:
+    """Simulation stage for one compiled deploy stage at a micro-batch size.
+
+    ``work`` is the stage's per-sample element count (``fifo_work``); a
+    micro-batch of ``micro_batch`` samples costs
+    ``overhead + ceil(work * micro_batch / elems_per_cycle)`` cycles, and the
+    stage is busy for the whole service time (ii == latency — the executor
+    runs one micro-batch at a time per stage). Total batch cycles therefore
+    trade hop overhead (favors big micro-batches) against pipeline fill/drain
+    (favors small ones) — the optimum the FIFO-model autotuner searches for.
+    """
+    mb = max(int(micro_batch), 1)
+    lat = int(overhead) + max(1, -(-int(work) * mb // int(elems_per_cycle)))
+    return Stage(name=name, ii=lat, latency=lat, elems_in=1, elems_out=1)
+
+
 def mlp_pipeline_stages(layer_dims: Sequence[int], reuse_factor: int = 1) -> List[Stage]:
     """Build the dataflow stage graph of an MLP deployment.
 

@@ -3,9 +3,13 @@
 Closes the paper's loop: quantization-aware training exports a QIR graph
 (``core.qir``: ``export_qmlp`` for the MLPs, ``export_qcnn`` for the conv
 nets), this package streamlines and fuses it into integer dataflow stages
-(``lower``), compiles the stage schedule into one jit program with an
-optional FIFO-sized streaming pipeline (``executor``), and measures it under
-the MLPerf Tiny load scenarios (``scenarios``).
+(``lower``), compiles the stage schedule into one jit program plus a
+segment-compiled streaming pipeline whose FIFO depths, micro-batch, and
+conv row blocks come from the FIFO-model autotuner (``executor``,
+``autotune``), and measures it under the MLPerf Tiny load scenarios
+(``scenarios``). See ``docs/pipeline.md`` for the streaming/autotune
+architecture and ``docs/lowering.md`` for the stage/bit-exactness
+contract.
 
 What actually lowers to fused integer stages:
 
@@ -28,9 +32,16 @@ exported graph runs — just not fused.
                                 compiled=model)       # + per-stage latency
 """
 
+from repro.deploy.autotune import (  # noqa: F401
+    TunedConfig,
+    autotune_model,
+    load_config,
+    save_config,
+)
 from repro.deploy.executor import (  # noqa: F401
     CompiledJaxModel,
     CompiledTinyModel,
+    DEFAULT_MICRO_BATCH,
     StreamingStats,
     compile_graph,
 )
@@ -45,7 +56,9 @@ from repro.deploy.lower import (  # noqa: F401
     FusedThresholdStage,
     IntPoolStage,
     RefChainStage,
+    Segment,
     StageSchedule,
+    group_segments,
     im2col,
     lower_graph,
     stage_for,
@@ -57,4 +70,5 @@ from repro.deploy.scenarios import (  # noqa: F401
     run_all_scenarios,
     server_poisson,
     single_stream,
+    streaming_pipeline,
 )

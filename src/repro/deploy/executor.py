@@ -1,7 +1,7 @@
 """Executable form of a lowered QIR graph: one jit program + a micro-batched
 streaming pipeline whose buffer depths come from the FIFO simulator.
 
-Two execution modes mirror the paper's deployment measurements:
+Three execution modes mirror the paper's deployment measurements:
 
   * **offline**  — the whole stage schedule compiled into a single XLA
     program over the full batch (max throughput; MLPerf Offline). Fused
@@ -9,29 +9,41 @@ Two execution modes mirror the paper's deployment measurements:
     for dense stages, the fused direct-conv ``conv_threshold`` (no
     materialized im2col) for conv stages lowered ``direct`` — and as the
     XLA-fused jnp reference otherwise (same integers either way).
-  * **streaming** — the batch is cut into micro-batches that flow through
-    per-stage programs connected by bounded queues. The queue capacities are
-    *decided* by ``core.dataflow.optimize_fifo_depths`` — the paper's
-    simulate-big/record-max/shrink-to-max+1 pass finally feeds a real
-    execution, instead of only printing a table.
+  * **streaming_compiled** — the deployment hot path: the stage schedule is
+    grouped into *segments* (``lower.group_segments`` — maximal runs of
+    fused/integer stages between host boundaries) and each segment executes
+    the whole micro-batched wave as ONE jit program: micro-batches advance
+    through the segment's stages inside ``jax.lax`` control flow, with
+    buffers donated between segment programs where the backend supports it.
+    Python is crossed once per segment, not once per stage per micro-batch.
+  * **streaming_host** — the reference queue-loop pipeline: micro-batches
+    flow through per-stage programs connected by bounded queues whose
+    capacities are *decided* by ``core.dataflow.optimize_fifo_depths`` — the
+    paper's simulate-big/record-max/shrink-to-max+1 pass feeding a real
+    execution. Kept for its observable occupancy/backpressure stats; it is
+    asserted bit-identical to the compiled path.
 
 The unfused per-node interpreter (``reference``) is kept as the baseline the
 benchmarks compare against — it is what running the QIR graph layer by layer
 without the compiler looks like.
+
+The default streaming micro-batch (and the direct-conv kernel's row block)
+can come from the FIFO-model autotuner (``deploy.autotune``) via
+``apply_tuned`` / ``compile_graph(..., autotune=True)`` instead of the
+historical hard-coded 16.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dataflow import Stage as SimStage
-from repro.core.dataflow import optimize_fifo_depths
+from repro.core.dataflow import micro_batch_stage, optimize_fifo_depths
 from repro.core.qir import Graph
 from repro.deploy.lower import (
     FlattenStage,
@@ -40,9 +52,14 @@ from repro.deploy.lower import (
     FusedThresholdStage,
     IntPoolStage,
     RefChainStage,
+    Segment,
     StageSchedule,
+    group_segments,
     lower_graph,
 )
+
+#: Historical default micro-batch; used only when no tuned config is applied.
+DEFAULT_MICRO_BATCH = 16
 
 
 def _on_tpu() -> bool:
@@ -54,13 +71,22 @@ def _on_tpu() -> bool:
 
 @dataclasses.dataclass
 class StreamingStats:
-    """What the FIFO pass decided and what the pipeline actually did."""
+    """What the FIFO pass decided and what the pipeline actually did.
+
+    ``mode`` distinguishes the host queue loop ("host": ``max_occupancy`` is
+    *observed*) from the compiled segment-wave path ("compiled":
+    ``max_occupancy`` is the FIFO simulator's modeled occupancy — the
+    compiled program has no per-hop queues to observe). ``segments`` lists
+    the (start, stop) stage ranges of the executed segment grouping.
+    """
 
     micro_batch: int
     n_micro: int
     fifo_depths: List[int]
     max_occupancy: List[int]
     sim_cycles: int
+    mode: str = "host"
+    segments: Optional[List[Tuple[int, int]]] = None
 
 
 class CompiledTinyModel:
@@ -73,9 +99,38 @@ class CompiledTinyModel:
         self.graph = graph
         self.use_pallas = _on_tpu() if use_pallas is None else use_pallas
         self.interpret = interpret
+        self.tuned = None          # deploy.autotune.TunedConfig, if applied
+        self._rebuild()
+
+    def _rebuild(self):
+        """(Re)create every compiled entry point from the current schedule —
+        called at construction and after ``apply_tuned`` mutates stage
+        parameters (jit closures capture the stage objects at trace time, so
+        stale programs must be dropped)."""
         self._offline = jax.jit(self._run_all)
         self._stage_fns = [jax.jit(self._make_stage_fn(s))
-                           for s in schedule.stages]
+                           for s in self.schedule.stages]
+        self.segments: List[Segment] = group_segments(self.schedule.stages)
+        self._segment_fns: Dict[int, Callable] = {}
+        self._plan_cache: Dict[Tuple[int, int], Tuple[List[int], int]] = {}
+
+    @property
+    def default_micro_batch(self) -> int:
+        return (self.tuned.micro_batch if self.tuned is not None
+                else DEFAULT_MICRO_BATCH)
+
+    def apply_tuned(self, cfg) -> "CompiledTinyModel":
+        """Adopt an autotuned config (``deploy.autotune.TunedConfig``): the
+        streaming default micro-batch and per-conv-stage ``block_h`` replace
+        the magic constants. Returns self for chaining."""
+        for s in self.schedule.stages:
+            if isinstance(s, FusedConvThresholdStage):
+                bh = cfg.block_h.get(s.name)
+                if bh is not None:
+                    s.block_h = min(int(bh), s.geom.out_h)
+        self.tuned = cfg
+        self._rebuild()
+        return self
 
     # -- single-program (offline) path -----------------------------------
     def _apply_stage(self, s, h):
@@ -126,19 +181,23 @@ class CompiledTinyModel:
         return jnp.asarray(out[self.graph.outputs[0]])
 
     # -- per-stage timing (feeds the scenario stage_ms breakdown) ---------
-    def stage_latencies(self, x, iters: int = 2) -> List[Dict[str, object]]:
+    def stage_latencies(self, x, iters: int = 5) -> List[Dict[str, object]]:
         """Median wall-time per compiled stage on one representative batch.
 
-        Runs the per-stage programs in schedule order (each stage's input is
-        the previous stage's real output) so conv-vs-dense costs are visible
-        in scenario reports."""
+        Per stage: one compile call, one *discarded* warm iteration, then
+        ``iters`` timed samples, median reported — enough samples that the
+        breakdown (and the autotuner's measured refinement it seeds) is
+        stable against scheduler noise. Runs the per-stage programs in
+        schedule order (each stage's input is the previous stage's real
+        output) so conv-vs-dense costs are visible in scenario reports."""
         import time
 
         out = []
         h = jnp.asarray(x)
         for s, fn in zip(self.schedule.stages, self._stage_fns):
             y = fn(h)
-            jax.block_until_ready(y)  # compile + warm
+            jax.block_until_ready(y)      # compile
+            jax.block_until_ready(fn(h))  # discarded warm iteration
             times = []
             for _ in range(max(iters, 1)):
                 t0 = time.perf_counter()
@@ -151,19 +210,28 @@ class CompiledTinyModel:
         return out
 
     # -- streaming (micro-batched pipeline) -------------------------------
-    def plan_streaming(self, n_micro: int) -> Tuple[List[int], int]:
+    def plan_streaming(self, n_micro: int, micro_batch: int = 1
+                       ) -> Tuple[List[int], int]:
         """Size the inter-stage queues with the paper's FIFO pass.
 
-        Each stage's simulated latency is proportional to its work,
-        parameterized on the lowering kind: MACs for dense stages, im2col
-        tile counts (output tiles x patch size) for ``im2col`` conv stages,
-        but only *output* tiles for ``direct`` fused conv stages — the
-        fused kernel never emits patch tiles into the pipeline, so sizing
-        its FIFOs from im2col counts would over-buffer (``fifo_work`` on
-        each stage class). Rate mismatches between wide and narrow layers
-        then show up as occupancy, exactly what the RTL simulation measured
-        on the FPGA.
+        Each stage's simulated service time scales with its per-sample work
+        times the micro-batch size, plus a fixed per-hop overhead
+        (``core.dataflow.micro_batch_stage``) — the cost model the
+        micro-batch autotuner searches over. Work is parameterized on the
+        lowering kind: MACs for dense stages, im2col tile counts (output
+        tiles x patch size) for ``im2col`` conv stages, but only *output*
+        tiles for ``direct`` fused conv stages — the fused kernel never
+        emits patch tiles into the pipeline, so sizing its FIFOs from im2col
+        counts would over-buffer (``fifo_work`` on each stage class). Rate
+        mismatches between wide and narrow layers then show up as occupancy,
+        exactly what the RTL simulation measured on the FPGA.
+
+        Plans are memoized per (n_micro, micro_batch) — the simulation is
+        deterministic, and the streaming entry points re-plan every call.
         """
+        cached = self._plan_cache.get((n_micro, micro_batch))
+        if cached is not None:
+            return list(cached[0]), cached[1]
         sim = []
         for s in self.schedule.stages:
             work = getattr(s, "fifo_work", None)
@@ -171,34 +239,59 @@ class CompiledTinyModel:
                 work = getattr(s, "macs", None)
             if work is None:
                 work = s.in_dim * s.out_dim
-            sim.append(SimStage(name=s.name, ii=1,
-                                latency=max(1, work // 8192) + 1,
-                                elems_in=1, elems_out=1))
+            sim.append(micro_batch_stage(s.name, work, micro_batch))
         res = optimize_fifo_depths(sim, n_tokens=n_micro)
-        return list(res["optimized_depths"]), int(res["optimized_cycles"])
+        plan = (list(res["optimized_depths"]), int(res["optimized_cycles"]))
+        self._plan_cache[(n_micro, micro_batch)] = plan
+        return list(plan[0]), plan[1]
 
-    def streaming(self, x_int, micro_batch: int = 16
-                  ) -> Tuple[jnp.ndarray, StreamingStats]:
-        """Run the batch as a micro-batched pipeline with bounded queues.
-
-        Numerically identical to ``offline``; the difference is the
-        execution schedule: at most ``depth[i]`` micro-batches may queue in
-        front of stage i, the capacities coming from the FIFO optimizer.
-        """
+    def _pad_micro(self, x_int, micro_batch: int):
         x_int = jnp.asarray(x_int)
         n = x_int.shape[0]
         pad = (-n) % micro_batch
         if pad:
             x_int = jnp.concatenate(
                 [x_int, jnp.zeros((pad,) + x_int.shape[1:], x_int.dtype)])
-        n_micro = x_int.shape[0] // micro_batch
-        depths, sim_cycles = self.plan_streaming(n_micro)
+        return x_int, n, x_int.shape[0] // micro_batch
+
+    def streaming_host(self, x_int, micro_batch: Optional[int] = None,
+                       fifo_depths: Optional[Sequence[int]] = None,
+                       feed_order: Optional[Sequence[int]] = None,
+                       ) -> Tuple[jnp.ndarray, StreamingStats]:
+        """The reference queue-loop pipeline: bounded host-side queues.
+
+        Numerically identical to ``offline`` / ``streaming_compiled``; the
+        difference is the execution schedule: at most ``depth[i]``
+        micro-batches may queue in front of stage i, the capacities coming
+        from the FIFO optimizer. This path crosses Python once per stage per
+        micro-batch, so it is NOT the deployment hot path — it is kept as
+        the observable reference: its occupancy stats are what validate the
+        FIFO model, and the compiled path is asserted bit-identical to it.
+
+        ``micro_batch=None`` resolves to the same (autotuned) default as
+        ``streaming_compiled``, so the two entry points always compare the
+        same schedule. ``fifo_depths`` overrides the optimizer's capacities
+        (backpressure testing: depth-1 FIFOs must still make progress);
+        ``feed_order`` permutes micro-batch admission (the idx bookkeeping
+        must restore batch order regardless).
+        """
+        micro_batch = (int(micro_batch) if micro_batch
+                       else self.default_micro_batch)
+        x_int, n, n_micro = self._pad_micro(x_int, micro_batch)
+        depths, sim_cycles = self.plan_streaming(n_micro,
+                                                 micro_batch=micro_batch)
+        if fifo_depths is not None:
+            assert len(fifo_depths) == len(depths), (fifo_depths, depths)
+            depths = [max(1, int(d)) for d in fifo_depths]
 
         n_stages = len(self.schedule.stages)
         queues = [collections.deque() for _ in range(n_stages + 1)]
         max_occ = [0] * (n_stages + 1)
+        order = list(feed_order) if feed_order is not None \
+            else list(range(n_micro))
+        assert sorted(order) == list(range(n_micro)), order
         feed = [(i, x_int[i * micro_batch:(i + 1) * micro_batch])
-                for i in range(n_micro)]
+                for i in order]
         feed_i = 0
         done: List[Optional[jnp.ndarray]] = [None] * n_micro
 
@@ -222,23 +315,102 @@ class CompiledTinyModel:
         y = jnp.concatenate([jnp.asarray(d) for d in done])[:n]
         return y, StreamingStats(micro_batch=micro_batch, n_micro=n_micro,
                                  fifo_depths=depths, max_occupancy=max_occ,
-                                 sim_cycles=sim_cycles)
+                                 sim_cycles=sim_cycles, mode="host",
+                                 segments=[(s.start, s.stop)
+                                           for s in self.segments])
+
+    # the historical name stays pointed at the observable reference path
+    streaming = streaming_host
+
+    # -- streaming, compiled (the deployment hot path) ---------------------
+    def _segment_fn(self, k: int) -> Callable:
+        """One jit program running segment k's whole micro-batch wave:
+        ``jax.lax.map`` advances every micro-batch through the segment's
+        stage chain on device. The wave buffer is donated between segment
+        programs on backends that support donation (TPU/GPU), so segment
+        boundaries don't double-buffer the whole wave."""
+        fn = self._segment_fns.get(k)
+        if fn is None:
+            seg = self.segments[k]
+            stages = self.schedule.stages[seg.start:seg.stop]
+
+            def run_wave(wave):
+                def body(h):
+                    for s in stages:
+                        h = self._apply_stage(s, h)
+                    return h
+                return jax.lax.map(body, wave)
+
+            donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+            fn = jax.jit(run_wave, donate_argnums=donate)
+            self._segment_fns[k] = fn
+        return fn
+
+    def streaming_compiled(self, x_int, micro_batch: Optional[int] = None
+                           ) -> Tuple[jnp.ndarray, StreamingStats]:
+        """Run the batch as a micro-batched pipeline without the host loop.
+
+        The batch is cut into micro-batches, stacked into one wave array,
+        and pushed through each compiled segment as ONE jit program
+        (``_segment_fn``); only host-boundary segments (fallback float
+        chains) return to Python, once per micro-batch. Bit-identical to
+        ``offline`` and ``streaming_host`` — same stage semantics, different
+        schedule. ``micro_batch=None`` uses the autotuned default
+        (``apply_tuned``), else ``DEFAULT_MICRO_BATCH``.
+        """
+        mb = int(micro_batch) if micro_batch else self.default_micro_batch
+        x_int, n, n_micro = self._pad_micro(x_int, mb)
+        depths, sim_cycles = self.plan_streaming(n_micro, micro_batch=mb)
+        wave = x_int.reshape((n_micro, mb) + x_int.shape[1:])
+        for k, seg in enumerate(self.segments):
+            if seg.compiled:
+                wave = self._segment_fn(k)(wave)
+            else:
+                # host boundary: the fallback interpreter, per micro-batch
+                outs = [wave[i] for i in range(n_micro)]
+                for si in range(seg.start, seg.stop):
+                    outs = [self._stage_fns[si](h) for h in outs]
+                wave = jnp.stack(outs)
+        y = wave.reshape((n_micro * mb,) + wave.shape[2:])[:n]
+        # no host queues to observe: report the FIFO model's occupancy
+        # (depth = max occupancy + 1 by construction of the optimizer)
+        return y, StreamingStats(micro_batch=mb, n_micro=n_micro,
+                                 fifo_depths=depths,
+                                 max_occupancy=[d - 1 for d in depths],
+                                 sim_cycles=sim_cycles, mode="compiled",
+                                 segments=[(s.start, s.stop)
+                                           for s in self.segments])
 
 
 def compile_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
                   use_pallas: Optional[bool] = None,
                   interpret: Optional[bool] = None,
-                  conv_lowering: Optional[str] = None) -> CompiledTinyModel:
+                  conv_lowering: Optional[str] = None,
+                  autotune: bool = False,
+                  tuned=None) -> CompiledTinyModel:
     """The one-call deployment entry point: QIR json graph -> executor.
 
     ``conv_lowering`` picks the conv stage algorithm ("direct" fused kernel
     by default, "im2col" fallback) for both offline and streaming modes —
     the stage methods the executor dispatches through carry the choice.
+
+    ``tuned`` applies a prebuilt ``deploy.autotune.TunedConfig``;
+    ``autotune=True`` instead loads (or searches and caches) the config for
+    this (model, platform) via ``deploy.autotune.autotune_model`` — honours
+    the ``REPRO_AUTOTUNE*`` knobs, see ``docs/pipeline.md``.
     """
     schedule = lower_graph(graph, in_scale=in_scale,
                            conv_lowering=conv_lowering)
-    return CompiledTinyModel(schedule, graph=graph, use_pallas=use_pallas,
-                             interpret=interpret)
+    cm = CompiledTinyModel(schedule, graph=graph, use_pallas=use_pallas,
+                           interpret=interpret)
+    if tuned is not None:
+        cm.apply_tuned(tuned)
+    elif autotune:
+        from repro.deploy.autotune import autotune_enabled, autotune_model
+
+        if autotune_enabled():
+            cm.apply_tuned(autotune_model(cm))
+    return cm
 
 
 class CompiledJaxModel:

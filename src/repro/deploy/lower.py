@@ -227,6 +227,7 @@ class FusedConvThresholdStage:
     mm_float: bool = False   # exact float32 GEMM path (see _float_mm_safe)
     affine: Optional[tuple] = None   # exact O(1) activation (see _apply_act)
     lowering: str = "direct"         # "direct" | "im2col"
+    block_h: Optional[int] = None    # tuned output-row block (None = planner)
 
     @property
     def out_scale(self) -> float:
@@ -338,7 +339,8 @@ class FusedConvThresholdStage:
             return ops.conv_threshold(
                 x.astype(jnp.int32), self.stage.w_int, self.stage.thresholds,
                 kernel=g.kernel, stride=g.stride, padding=g.padding,
-                out_h=g.out_h, out_w=g.out_w, interpret=interpret)
+                out_h=g.out_h, out_w=g.out_w, block_h=self.block_h,
+                interpret=interpret)
         y = ops.threshold_matmul(
             self._cols2d(x_int).astype(jnp.int32), self.stage.w_int,
             self.stage.thresholds, interpret=interpret)
@@ -506,6 +508,50 @@ class StageSchedule:
                 kind += f"[{s.lowering}]"
             rows.append(f"  {s.name:16s} {kind:24s} {s.in_dim:>6d} -> {s.out_dim}")
         return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# segments (compiled streaming)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A contiguous run of stages the executor treats as one unit.
+
+    ``compiled`` segments are runs of fused/integer stages (everything except
+    the fallback float interpreter) that the streaming executor compiles into
+    a *single* jit program per micro-batch wave — micro-batches advance
+    through all of the segment's stages inside ``jax.lax`` control flow, so
+    Python is crossed once per segment instead of once per stage per
+    micro-batch. A ``RefChainStage`` is a *host boundary*: it interprets
+    arbitrary leftover QIR nodes, so it gets its own non-compiled segment and
+    the wave returns to the host around it.
+    """
+
+    start: int   # first stage index (inclusive)
+    stop: int    # last stage index (exclusive)
+    compiled: bool
+
+    @property
+    def n_stages(self) -> int:
+        return self.stop - self.start
+
+
+def group_segments(stages: Sequence[Stage]) -> List[Segment]:
+    """Group a stage schedule into maximal compiled segments split at host
+    boundaries (``RefChainStage``). Every stage lands in exactly one segment
+    and segment order is schedule order."""
+    segments: List[Segment] = []
+    run_start = 0
+    for i, s in enumerate(stages):
+        if isinstance(s, RefChainStage):
+            if i > run_start:
+                segments.append(Segment(run_start, i, compiled=True))
+            segments.append(Segment(i, i + 1, compiled=False))
+            run_start = i + 1
+    if run_start < len(stages):
+        segments.append(Segment(run_start, len(stages), compiled=True))
+    return segments
 
 
 # ---------------------------------------------------------------------------

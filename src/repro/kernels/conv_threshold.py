@@ -26,6 +26,18 @@ divides; zero padding is exact on integer codes whenever code 0 means value
 0 — the export contract) and picks ``block_h`` from the output-tile shape.
 Channels ride whole in VMEM like ``multi_threshold`` does — tiny-model
 channel counts are 3..512.
+
+**Line-buffer DMA:** the input block spec carries only the rows a row block
+actually reads — ``(block_h - 1) * stride + kernel`` rows, halo included —
+not the whole sample. The host wrapper restructures the padded input into
+per-block row *bands* (``_row_bands``: band j = input rows
+``[j * block_h * stride, j * block_h * stride + band_rows)``, overlapping
+rows duplicated once), so the Pallas grid pipeline streams exactly one band
+per program and its revolving block buffers double-buffer the fetch — the
+next row block's band DMA overlaps the current block's tap matmuls, the TPU
+analogue of the paper's line-buffer streaming. Before this the block spec
+pinned the whole padded sample per program (index map ignored the row-block
+index), so every row block refetched the full input.
 """
 
 from __future__ import annotations
@@ -52,27 +64,48 @@ def same_pads(h: int, w: int, out_h: int, out_w: int, stride: int,
     return (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2)
 
 
+def band_rows(block_h: int, stride: int, kernel: int) -> int:
+    """Input rows one output-row block reads: body rows plus the halo the
+    K x K taps reach past the block boundary. The single source of truth for
+    the band layout shared by the kernel, the host wrapper, and the traffic
+    model (``core.bops.conv_input_band_bytes``)."""
+    return (block_h - 1) * stride + kernel
+
+
+def _row_bands(x_pad: jnp.ndarray, block_h: int, stride: int,
+               kernel: int, n_blocks: int) -> jnp.ndarray:
+    """Restructure (N, HP, WP, C) into per-row-block bands
+    (N, n_blocks, band_rows, WP, C): band j starts at input row
+    ``j * block_h * stride`` and carries exactly the rows that output-row
+    block j reads (halo included, duplicated across adjacent bands). This is
+    what lets the Pallas block spec fetch only the needed rows per program.
+    """
+    rs = block_h * stride                          # rows consumed per block
+    br = band_rows(block_h, stride, kernel)
+    rows = jnp.arange(n_blocks)[:, None] * rs + jnp.arange(br)[None, :]
+    return jnp.take(x_pad, rows, axis=1)           # (N, nb, br, WP, C)
+
+
 def _conv_thr_kernel(x_ref, w_ref, thr_ref, o_ref, *, kernel: int,
                      stride: int, block_h: int, out_w: int, in_ch: int,
                      n_steps: int):
     """One (sample, output-row-block) program.
 
-    x_ref:   (1, HP, WP, C) int32 — the whole padded sample
+    x_ref:   (1, 1, band_rows, WP, C) int32 — only this block's input rows
+             (halo included); the grid pipeline double-buffers the band
+             fetch against the previous program's tap matmuls
     w_ref:   (K*K*C, F)     int   — shared im2col weight layout
     thr_ref: (S, F)         int32 — threshold bank, steps-major
     o_ref:   (1, block_h, OW, F)  int32 output codes
     """
-    j = pl.program_id(1)
-    x = x_ref[0]                                   # (HP, WP, C)
+    x = x_ref[0, 0]                                # (band_rows, WP, C)
     rh = (block_h - 1) * stride + 1                # input rows per tap slice
     rw = (out_w - 1) * stride + 1
     acc = jnp.zeros((block_h * out_w, w_ref.shape[1]), jnp.int32)
     for kh in range(kernel):                       # static K x K tap loop
         for kw in range(kernel):
-            row0 = j * (block_h * stride) + kh     # dynamic (grid) row start
-            xs = jax.lax.dynamic_slice(x, (row0, kw, 0), (rh, rw, in_ch))
-            if stride > 1:
-                xs = xs[::stride, ::stride, :]     # static strided decimation
+            # band-local rows: all-static shifted-window slice + decimation
+            xs = x[kh:kh + rh:stride, kw:kw + rw:stride, :]
             tap = (kh * kernel + kw) * in_ch
             w_tap = w_ref[tap:tap + in_ch, :].astype(jnp.int32)
             acc += jax.lax.dot_general(
@@ -107,7 +140,12 @@ def conv_threshold(
 
     Requires ``out_h % block_h == 0`` and the input padded tall enough for
     the last row block: ``HP >= (out_h - 1) * stride + kernel`` (the host
-    wrapper guarantees both). Returns (N, out_h, out_w, F) int32 codes.
+    wrapper guarantees both). The input is restructured into per-row-block
+    bands so every grid program fetches only the ``band_rows`` input rows it
+    reads (halo included) — the Pallas pipeline then double-buffers the next
+    band's fetch behind the current block's tap matmuls, instead of pinning
+    the whole padded sample per program. Returns (N, out_h, out_w, F) int32
+    codes.
     """
     n, hp, wp, c = x_pad.shape
     f = w2d.shape[1]
@@ -118,14 +156,18 @@ def conv_threshold(
     assert hp >= (out_h - 1) * stride + kernel, (hp, out_h, stride, kernel)
     assert wp >= (out_w - 1) * stride + kernel, (wp, out_w, stride, kernel)
     thr_t = thresholds.T.astype(jnp.int32)         # (S, F): lanes = channels
+    n_blocks = out_h // block_h
+    br = band_rows(block_h, stride, kernel)
+    x_band = _row_bands(x_pad.astype(jnp.int32), block_h, stride, kernel,
+                        n_blocks)                  # (N, nb, br, WP, C)
 
     return pl.pallas_call(
         functools.partial(
             _conv_thr_kernel, kernel=kernel, stride=stride, block_h=block_h,
             out_w=out_w, in_ch=c, n_steps=s),
-        grid=(n, out_h // block_h),
+        grid=(n, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, c), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1, br, wp, c), lambda i, j: (i, j, 0, 0, 0)),
             pl.BlockSpec((kernel * kernel * c, f), lambda i, j: (0, 0)),
             pl.BlockSpec((s, f), lambda i, j: (0, 0)),
         ],
@@ -133,10 +175,10 @@ def conv_threshold(
                                lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, out_h, out_w, f), jnp.int32),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel"),
+            dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x_pad.astype(jnp.int32), w2d, thr_t)
+    )(x_band, w2d, thr_t)
 
 
 def direct_conv_acc(x_pad: jnp.ndarray, w2d: jnp.ndarray, *, kernel: int,

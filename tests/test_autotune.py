@@ -1,0 +1,190 @@
+"""FIFO-model autotuner: determinism, cache round-trip, config plumbing.
+
+The autotuner must be a *function* of the schedule and the probe results:
+given a fixed (fake) probe clock the whole search is deterministic, the
+JSON cache round-trips to an identical config, and applying a config
+replaces the executor's magic constants (micro-batch 16, planner block_h)
+without perturbing a single output integer.
+"""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.qir import export_qcnn, export_qmlp
+from repro.deploy import FusedConvThresholdStage, compile_graph
+from repro.deploy.autotune import (
+    TunedConfig,
+    autotune_enabled,
+    autotune_model,
+    block_h_candidates,
+    config_path,
+    load_config,
+    plan_block_h,
+    save_config,
+    schedule_key,
+)
+from repro.models.tiny import ICModel, KWSMLP
+
+IN_SCALE = 1.0 / 127.0
+
+
+def _mlp_compiled(width=16):
+    model = KWSMLP(width=width)
+    params = model.init(jax.random.PRNGKey(0))
+    hidden_defs, _ = model.layers()
+    graph = export_qmlp(hidden_defs, params["hidden"], params["head"],
+                        meta={"model": "KWS"}, freeze_scales=True,
+                        in_scale=IN_SCALE)
+    return compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
+
+
+def _conv_compiled():
+    rng = np.random.default_rng(5)
+    model = ICModel(in_hw=8, filters=(4, 4), kernels=(3, 3), strides=(1, 2))
+    params = model.init(jax.random.PRNGKey(5))
+    cal = rng.integers(-127, 128, (4, 8, 8, 3)).astype(np.int32)
+    graph = export_qcnn(model, params, calibrate=cal)
+    return compile_graph(graph, in_scale=graph.meta["in_scale"],
+                         use_pallas=False)
+
+
+def _fixed_probe(times):
+    """Deterministic probe clock: scripted seconds per micro-batch size."""
+    def probe(cm, x, micro_batch):
+        return times[micro_batch]
+    return probe
+
+
+def test_autotuner_is_deterministic_under_fixed_probe(tmp_path):
+    cm = _mlp_compiled()
+    probe = _fixed_probe({mb: 0.010 + 0.001 * mb for mb in (1, 2, 4, 8, 16,
+                                                            32, 64)})
+    a = autotune_model(cm, batch=32, probe=probe, directory=str(tmp_path),
+                       force=True)
+    b = autotune_model(cm, batch=32, probe=probe,
+                       directory=str(tmp_path / "other"), force=True)
+    assert a == b
+    # fixed probe: monotone-increasing time in mb -> smallest probed wins
+    assert str(a.micro_batch) in a.probe_ms
+    assert a.probe_ms[str(a.micro_batch)] == min(a.probe_ms.values())
+    # every candidate carries the modeled FIFO numbers that ranked it
+    assert all("modeled_cycles" in c and "fifo_depths" in c
+               for c in a.candidates)
+
+
+def test_autotune_cache_round_trip_is_identical(tmp_path):
+    cm = _conv_compiled()
+    probe = _fixed_probe({mb: 0.005 for mb in (1, 2, 4, 8, 16, 32, 64)})
+    cfg = autotune_model(cm, batch=16, probe=probe,
+                         directory=str(tmp_path), force=True)
+    # write -> load -> identical plan (the CI round-trip check)
+    loaded = load_config(cfg.key, str(tmp_path))
+    assert loaded == cfg
+    # a second save of the loaded config is byte-stable
+    p1 = config_path(cfg.key, str(tmp_path))
+    with open(p1) as f:
+        first = f.read()
+    save_config(loaded, str(tmp_path))
+    with open(p1) as f:
+        assert f.read() == first
+    # second autotune call hits the cache, no probe needed
+    again = autotune_model(cm, batch=16, probe=None,
+                           directory=str(tmp_path), force=False)
+    assert again == cfg
+
+
+def test_config_dict_round_trip():
+    cfg = TunedConfig(key="k", platform="cpu", micro_batch=8,
+                      block_h={"conv0": 4}, fifo_depths=[2, 2, 3],
+                      modeled_cycles=123, modeled_traffic_bytes=456.5,
+                      candidates=[{"micro_batch": 8, "modeled_cycles": 123}],
+                      probe_ms={"8": 1.25})
+    assert TunedConfig.from_dict(cfg.to_dict()) == cfg
+    # unknown keys from future schemas are dropped, not fatal
+    d = cfg.to_dict()
+    d["new_field"] = "x"
+    assert TunedConfig.from_dict(d) == cfg
+
+
+def test_apply_tuned_replaces_magic_constants_bit_exactly(tmp_path):
+    cm = _conv_compiled()
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.integers(-127, 128, (6, 8, 8, 3)), jnp.int32)
+    y_before = np.asarray(cm.offline(x))
+    assert cm.default_micro_batch == 16    # the historical constant
+    probe = _fixed_probe({mb: 0.005 for mb in (1, 2, 4, 8, 16, 32, 64)})
+    cfg = autotune_model(cm, batch=16, probe=probe, force=True,
+                         directory=str(tmp_path))
+    cm.apply_tuned(cfg)
+    assert cm.default_micro_batch == cfg.micro_batch
+    conv_stages = [s for s in cm.schedule.stages
+                   if isinstance(s, FusedConvThresholdStage)]
+    assert conv_stages and all(s.block_h == cfg.block_h[s.name]
+                               for s in conv_stages)
+    assert all(1 <= s.block_h <= s.geom.out_h for s in conv_stages)
+    # tuning changes schedules' execution parameters, never the integers
+    np.testing.assert_array_equal(np.asarray(cm.offline(x)), y_before)
+    y_s, st = cm.streaming_compiled(x)
+    assert st.micro_batch == cfg.micro_batch
+    np.testing.assert_allclose(np.asarray(y_s), y_before,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_plan_block_h_respects_vmem_and_breaks_ties_to_target():
+    from repro.deploy import ConvGeom
+
+    # no halo (K=1): every block size streams equal bytes; the tie-break
+    # lands near the 256-row matmul target, not at 1
+    g1 = ConvGeom(kernel=1, stride=1, padding="SAME", in_h=32, in_w=32,
+                  in_ch=3, out_h=32, out_w=32, out_ch=8)
+    plan = plan_block_h(g1)
+    assert plan["block_h"] == 8            # 8 * 32 = 256 rows
+    traffics = {c["input_bytes"] for c in plan["candidates"]}
+    assert len(traffics) == 1
+    # halo case (K=3, stride 1): traffic strictly decreases with block_h,
+    # so the biggest fitting block wins
+    g2 = ConvGeom(kernel=3, stride=1, padding="SAME", in_h=32, in_w=32,
+                  in_ch=8, out_h=32, out_w=32, out_ch=8)
+    assert plan_block_h(g2)["block_h"] == 32
+    # a tiny VMEM budget forces small blocks
+    small = plan_block_h(g2, budget_bytes=1 << 12)["block_h"]
+    assert small < 32
+    cands = plan_block_h(g2)["candidates"]
+    assert [c["block_h"] for c in cands] == block_h_candidates(32)
+
+
+def test_compile_graph_autotune_flag_and_env_knobs(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    cm = _mlp_compiled()
+    graph = cm.graph
+    # REPRO_AUTOTUNE=0 disables the whole thing
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    assert not autotune_enabled()
+    cm0 = compile_graph(graph, in_scale=IN_SCALE, use_pallas=False,
+                        autotune=True)
+    assert cm0.tuned is None
+    monkeypatch.delenv("REPRO_AUTOTUNE")
+    assert autotune_enabled()
+    # enabled: searches (wall probes on this tiny model), caches, applies
+    cm1 = compile_graph(graph, in_scale=IN_SCALE, use_pallas=False,
+                        autotune=True)
+    assert cm1.tuned is not None
+    assert os.path.exists(config_path(schedule_key(cm1), str(tmp_path)))
+    # a second compile consumes the cache (config equality, no re-search)
+    cm2 = compile_graph(graph, in_scale=IN_SCALE, use_pallas=False,
+                        autotune=True)
+    assert cm2.tuned == cm1.tuned
+    # prebuilt configs can be passed straight through
+    cm3 = compile_graph(graph, in_scale=IN_SCALE, use_pallas=False,
+                        tuned=cm1.tuned)
+    assert cm3.tuned == cm1.tuned
+
+
+def test_schedule_key_distinguishes_models():
+    k1 = schedule_key(_mlp_compiled())
+    k2 = schedule_key(_conv_compiled())
+    assert k1 != k2
+    assert k1 == schedule_key(_mlp_compiled())   # stable

@@ -22,6 +22,7 @@ from repro.deploy.scenarios import (
     offline,
     server_poisson,
     single_stream,
+    streaming_pipeline,
 )
 
 
@@ -187,6 +188,48 @@ def test_stage_ms_breakdown_sums_to_end_to_end(clock, monkeypatch):
         h = fn(h)
     e2e_ms = (clock.perf_counter() - t0) * 1e3
     assert sum(b["ms"] for b in breakdown) == pytest.approx(e2e_ms)
+
+
+def test_offline_reports_median_span_over_iters(clock):
+    """Satellite: offline(iters=) must report the MEDIAN of the timed
+    spans, not a single (noisy) run."""
+    spans = iter([0.010, 0.010,          # warmup (2)
+                  0.090, 0.032, 0.001])  # timed: median = 0.032
+
+    def infer(xb):
+        clock.advance(next(spans))
+        return np.zeros((xb.shape[0], 2), np.float32)
+
+    rep = offline(infer, _mk, n_samples=32, warmup=2, iters=3)
+    assert rep.extras["iters"] == 3
+    assert rep.p50_ms == pytest.approx(0.032 / 32 * 1e3)
+    assert rep.throughput_qps == pytest.approx(32 / 0.032)
+
+
+def test_streaming_pipeline_scenario_uses_tuned_default(clock):
+    """The streaming scenario consumes the executor's (autotuned) default
+    micro-batch and reports the FIFO plan that scheduled the run."""
+    calls = []
+
+    class FakeStats:
+        micro_batch = 8
+        fifo_depths = [2, 2]
+        segments = [(0, 2)]
+
+    class FakeCompiled:
+        def streaming_compiled(self, xb, micro_batch=None):
+            calls.append(micro_batch)
+            clock.advance(0.016)
+            return np.zeros((xb.shape[0], 2), np.float32), FakeStats()
+
+    rep = streaming_pipeline(FakeCompiled(), _mk, n_samples=16,
+                             warmup=1, iters=3)
+    assert rep.scenario == "StreamingOffline"
+    assert calls == [None] * 4            # warmup + 3 timed, tuned default
+    assert rep.extras["micro_batch"] == 8
+    assert rep.extras["fifo_depths"] == "[2, 2]"
+    assert rep.p50_ms == pytest.approx(0.016 / 16 * 1e3)
+    assert rep.throughput_qps == pytest.approx(16 / 0.016)
 
 
 def test_offline_report_attaches_stage_breakdown(clock, monkeypatch):

@@ -1,0 +1,156 @@
+"""Compiled streaming pipeline: segment grouping + three-way bit-exactness.
+
+The contract: ``streaming_compiled`` (one jit program per segment wave, no
+host loop on the hot path) must produce exactly the integers of
+``streaming_host`` (the queue-loop reference) and ``offline`` (the single
+fused program) — on every golden model, under backpressure (depth-1 FIFOs),
+out-of-order admission, and non-dividing micro-batches.
+"""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.qir import Graph, Node, QuantSpec
+from repro.deploy import (
+    RefChainStage,
+    Segment,
+    compile_graph,
+    group_segments,
+)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+MODELS = ("kws", "ad", "ic", "cnv")
+
+
+def _load(name):
+    graph = Graph.load(os.path.join(GOLDEN_DIR, f"{name}.qir.json"))
+    data = np.load(os.path.join(GOLDEN_DIR, f"{name}.golden.npz"))
+    return graph, data["x"]
+
+
+def _assert_same(got, want, label):
+    got, want = np.asarray(got), np.asarray(want)
+    if np.issubdtype(want.dtype, np.integer):
+        np.testing.assert_array_equal(got, want, err_msg=label)
+    else:
+        # float head logits: exact integers through one affine; the three
+        # paths batch rows identically so bitwise equality is expected, but
+        # only the integer contract is guaranteed
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
+                                   err_msg=label)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_streaming_compiled_equals_host_and_offline(name):
+    """Acceptance: streaming_compiled == streaming_host == offline on all
+    four golden models."""
+    graph, x = _load(name)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    x = jnp.asarray(x)
+    y_off = cm.offline(x)
+    y_host, st_h = cm.streaming_host(x, micro_batch=2)
+    y_cmp, st_c = cm.streaming_compiled(x, micro_batch=2)
+    _assert_same(y_host, y_off, f"{name} host-vs-offline")
+    _assert_same(y_cmp, y_off, f"{name} compiled-vs-offline")
+    _assert_same(y_cmp, y_host, f"{name} compiled-vs-host")
+    assert st_c.mode == "compiled" and st_h.mode == "host"
+    assert st_c.micro_batch == st_h.micro_batch == 2
+    assert st_c.segments == st_h.segments
+    # fully fused schedules are one compiled segment: zero host boundaries
+    assert st_c.segments == [(0, len(cm.schedule.stages))]
+    # modeled occupancy obeys the optimizer's depth = occ + 1 construction
+    assert all(o < d for o, d in zip(st_c.max_occupancy, st_c.fifo_depths))
+
+
+def test_streaming_legacy_alias_is_host_path():
+    graph, x = _load("kws")
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    y, st = cm.streaming(jnp.asarray(x), micro_batch=2)
+    assert st.mode == "host"
+    _assert_same(y, cm.offline(jnp.asarray(x)), "alias")
+
+
+def test_group_segments_splits_at_host_boundaries():
+    class _Fused:            # stand-ins: anything not RefChainStage compiles
+        pass
+
+    ref = RefChainStage.__new__(RefChainStage)
+    f = _Fused()
+    assert group_segments([f, f, f]) == [Segment(0, 3, True)]
+    assert group_segments([f, ref, f]) == [
+        Segment(0, 1, True), Segment(1, 2, False), Segment(2, 3, True)]
+    assert group_segments([ref]) == [Segment(0, 1, False)]
+    assert group_segments([ref, ref]) == [
+        Segment(0, 1, False), Segment(1, 2, False)]
+    assert group_segments([f, f, ref]) == [
+        Segment(0, 2, True), Segment(2, 3, False)]
+
+
+def test_streaming_compiled_crosses_host_boundary():
+    """A schedule with a fallback float chain still runs compiled streaming:
+    the RefChain segment returns to the host, everything else is waved."""
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((6, 4)).astype(np.float32) * 0.3
+    g = Graph(inputs=["x"], outputs=["y"],
+              initializers={"w": w, "b": np.zeros((4,), np.float32),
+                            "m": np.full((4,), 2.0, np.float32)})
+    g.nodes = [
+        Node("Dense", "d0", ["x", "w", "b"], ["h0"]),
+        Node("Relu", "r0", ["h0"], ["h1"]),
+        Node("Quant", "q0", ["h1"], ["h2"], quant=QuantSpec(bits=4)),
+        Node("Mul", "m0", ["h2", "m"], ["y"]),    # unfusable suffix
+    ]
+    cm = compile_graph(g, in_scale=0.1, use_pallas=False)
+    kinds = [seg.compiled for seg in cm.segments]
+    assert kinds == [True, False]   # fused stage, then the host fallback
+    x = jnp.asarray(rng.integers(-7, 8, (10, 6)), jnp.int32)
+    y_off = cm.offline(x)
+    y_cmp, st = cm.streaming_compiled(x, micro_batch=4)   # pads 10 -> 12
+    np.testing.assert_allclose(np.asarray(y_cmp), np.asarray(y_off),
+                               rtol=1e-6, atol=1e-6)
+    assert st.segments == [(0, 1), (1, 2)]
+
+
+def test_streaming_host_depth_one_fifos_make_progress():
+    """Backpressure safety: capacity-1 queues everywhere must still drain
+    the whole batch (downstream-first firing frees space upstream) and the
+    observed occupancy must respect the forced depths."""
+    graph, x = _load("ad")
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    x = jnp.asarray(x)
+    ones = [1] * (len(cm.schedule.stages) + 1)
+    y, st = cm.streaming_host(x, micro_batch=2, fifo_depths=ones)
+    _assert_same(y, cm.offline(x), "depth-1")
+    assert st.fifo_depths == ones
+    assert all(o <= 1 for o in st.max_occupancy[:-1])
+
+
+def test_streaming_host_out_of_order_feed_restores_batch_order():
+    """The idx bookkeeping must reassemble the batch no matter the
+    admission order of micro-batches."""
+    graph, x = _load("kws")
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    x = jnp.asarray(x)
+    n_micro = x.shape[0] // 2
+    y_rev, _ = cm.streaming_host(x, micro_batch=2,
+                                 feed_order=list(reversed(range(n_micro))))
+    _assert_same(y_rev, cm.offline(x), "reversed feed")
+    with pytest.raises(AssertionError):
+        cm.streaming_host(x, micro_batch=2, feed_order=[0] * n_micro)
+
+
+def test_streaming_compiled_pads_non_dividing_micro_batch():
+    graph, x = _load("ic")
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    x = jnp.asarray(x)[:3]          # 3 % 2 != 0 -> one padded micro-batch
+    y, st = cm.streaming_compiled(x, micro_batch=2)
+    _assert_same(y, cm.offline(x), "padded tail")
+    assert y.shape[0] == 3 and st.n_micro == 2
