@@ -1,4 +1,4 @@
-.PHONY: test test-fast bench bench-table6 bench-scenarios example
+.PHONY: test test-fast bench bench-table6 bench-scenarios bench-serve example
 
 test:            ## full tier-1 suite
 	./scripts/test.sh
@@ -14,6 +14,9 @@ bench-table6:    ## MLPerf-Tiny scenario sweep over compiled deployments
 
 bench-scenarios: ## scenario sweep, standalone (REPRO_FAST=1 for a quick pass)
 	PYTHONPATH=src:. REPRO_FAST=$(REPRO_FAST) python benchmarks/table6_scenarios.py
+
+bench-serve:     ## serving throughput-at-SLO curves over the dynamic batcher
+	PYTHONPATH=src:. REPRO_FAST=$(REPRO_FAST) python benchmarks/serve_bench.py
 
 example:         ## the end-to-end codesign + compiled-deployment example
 	PYTHONPATH=src python examples/mlperf_tiny_codesign.py

@@ -20,6 +20,7 @@ from benchmarks import (
     fig3_asha_scan,
     fig4_quant_scan,
     kernel_bench,
+    serve_bench,
     table1_models,
     table2_fifo,
     table3_fusion,
@@ -39,6 +40,7 @@ SECTIONS = {
     "fig3": fig3_asha_scan.run,
     "fig4": fig4_quant_scan.run,
     "kernels": kernel_bench.run,
+    "serve": serve_bench.run,
 }
 
 

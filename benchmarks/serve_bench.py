@@ -1,0 +1,190 @@
+"""Serving benchmark: throughput-at-SLO curves over the dynamic batcher.
+
+The first benchmark gated on *tail latency under load* rather than
+single-query speed: every Table-1 model is compiled, autotuned, given an
+SLO-constrained operating point (``deploy.autotune.slo_micro_batch`` — the
+largest wave whose modeled fill+drain fits the p99 budget), and then
+driven through the ``repro.serve`` router with Poisson arrivals at a sweep
+of load fractions of its modeled saturation throughput. Each point reports
+p50/p90/p99 latency, achieved throughput, shed rate, and wave occupancy —
+and asserts the wave-padding contract by checking every served result
+bit-exact against ``offline`` (``server_streaming`` does the comparison,
+padded partial waves included).
+
+The **operating point** per model is the largest swept load whose p99
+stayed inside the budget with shed rate < 1% — the "throughput at SLO"
+number a capacity planner would quote. Everything lands machine-readable
+in ``BENCH_serving.json`` (``REPRO_BENCH_DIR``) next to the scenario and
+kernel artifacts so the serving trajectory is tracked across PRs.
+
+Set REPRO_FAST=1 for a reduced-size pass (CI / smoke).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import banner, emit_json, print_rows, row
+from benchmarks.table6_scenarios import _compile_conv, _compile_mlp
+from repro.deploy.autotune import autotune_model
+from repro.deploy.scenarios import server_streaming
+from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
+from repro.serve import (
+    ServiceModel,
+    measure_wave_service_s,
+    slo_operating_point,
+)
+
+FAST = os.environ.get("REPRO_FAST", "0") not in ("0", "")
+
+#: Swept offered-load fractions of the modeled saturation throughput.
+LOAD_FRACTIONS = (0.7, 1.1) if FAST else (0.3, 0.5, 0.7, 0.9, 1.1)
+
+#: Shed-rate ceiling for a load point to count as "inside SLO".
+SHED_CEILING = 0.01
+
+
+def _budget_ms(service: ServiceModel, micro_batch: int) -> float:
+    """Per-model p99 budget: 6x the modeled tuned-wave service time,
+    floored at 10 ms. Derived (not hard-coded) so the same bench stays
+    meaningful across machines an order of magnitude apart."""
+    return max(10.0, 6.0 * service.wave_service_s(micro_batch) * 1e3)
+
+
+def bench_model(name: str, cm, mk, n_queries: int):
+    cfg = autotune_model(cm, batch=32 if FAST else 64)
+    cm.apply_tuned(cfg)
+    # model-first service estimate, pinned to reality by ONE measured wave
+    # probe at the tuned wave size — stage compute alone misses the
+    # per-wave dispatch overhead that dominates small models on CPU, and a
+    # capacity plan from the raw model would sweep pure overload
+    service = ServiceModel.from_compiled(cm, probe_batch=8)
+    tuned_mb = cm.default_micro_batch
+    service = service.recalibrated(
+        measure_wave_service_s(cm, tuned_mb), tuned_mb)
+    budget = _budget_ms(service, tuned_mb)
+    # the wave's own service may take at most ~25% of the budget: the
+    # admission estimate adds the batching wait (1.5x service below) and
+    # queued waves on top, and est(empty queue) must clear the budget or
+    # the controller sheds everything before the first wave forms.
+    # Fixed-point-iterate the choice: dispatch overhead is flat across
+    # wave sizes, so a model calibrated at the tuned wave is optimistic
+    # about smaller waves — re-measure at the chosen wave until it
+    # settles, and the modeled saturation the sweep scales is honest.
+    point = slo_operating_point(service, 0.25 * budget)
+    mb = int(point["micro_batch"])
+    for _ in range(2):
+        service = service.recalibrated(measure_wave_service_s(cm, mb), mb)
+        point = slo_operating_point(service, 0.25 * budget)
+        if int(point["micro_batch"]) == mb:
+            break
+        mb = int(point["micro_batch"])
+    # deadline long enough that full waves can form at sub-saturation load
+    max_wait_ms = max(2.0, 1.5 * service.wave_service_s(mb) * 1e3)
+
+    # honest saturation: drive the router itself far past the modeled
+    # peak with shedding off — back-to-back full waves through the real
+    # dispatch loop (router bookkeeping included) — and read the achieved
+    # throughput back as the capacity the sweep scales. The service model
+    # is pinned to that number too, so the admission controller and the
+    # offered load agree about what a wave really costs end to end.
+    probe = server_streaming(
+        cm, mk, qps=3.0 * service.saturation_qps(mb),
+        n_queries=n_queries, seed=17, max_wait_ms=max_wait_ms,
+        micro_batch=mb, warmup=1)
+    sat_qps = probe.throughput_qps
+    service = service.recalibrated(mb / sat_qps, mb)
+    budget = max(budget, 3.5 * service.wave_service_s(mb) * 1e3)
+    max_wait_ms = max(2.0, 1.5 * service.wave_service_s(mb) * 1e3)
+
+    curve = []
+    for frac in LOAD_FRACTIONS:
+        rep = server_streaming(
+            cm, mk, qps=frac * sat_qps, n_queries=n_queries,
+            seed=int(frac * 100), max_wait_ms=max_wait_ms,
+            p99_budget_ms=budget, micro_batch=mb, service_model=service)
+        curve.append({
+            "load_fraction": frac,
+            "offered_qps": rep.extras["offered_qps"],
+            "achieved_qps": rep.throughput_qps,
+            "p50_ms": rep.p50_ms, "p90_ms": rep.p90_ms, "p99_ms": rep.p99_ms,
+            "shed_rate": rep.extras["shed_rate"],
+            "served": rep.extras["served"], "shed": rep.extras["shed"],
+            "wave_occupancy": rep.extras["wave_occupancy"],
+            "met_slo": rep.extras["met_slo"],
+            "bit_exact_vs_offline": rep.extras.get("bit_exact_vs_offline"),
+        })
+
+    inside = [c for c in curve
+              if c["met_slo"] and c["shed_rate"] < SHED_CEILING]
+    op = max(inside, key=lambda c: c["achieved_qps"]) if inside else None
+    return {
+        "micro_batch": mb,
+        "p99_budget_ms": budget,
+        "max_wait_ms": max_wait_ms,
+        "measured_saturation_qps": sat_qps,
+        "service_calibration": service.calibration,
+        "slo_candidates": point["candidates"],
+        "curve": curve,
+        "operating_point": op,
+    }
+
+
+def run():
+    banner("Serving: throughput-at-SLO over the dynamic-batching router")
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    n_queries = 48 if FAST else 128
+
+    entries = {}
+    kws, ad = KWSMLP(), ADAutoencoder()
+    for name, model, dim in (("KWS-FINN", kws, 490), ("AD-hls4ml", ad, 128)):
+        cm = _compile_mlp(model, key)
+        mk = (lambda d: lambda i: rng.integers(
+            -127, 128, (d,)).astype(np.int32))(dim)
+        entries[name] = (cm, mk)
+    for name, model in (("IC-hls4ml", ICModel()), ("IC-FINN-CNV", CNVModel())):
+        cm = _compile_conv(model, key, rng)
+        hw, ch = model.in_hw, model.in_ch
+        mk = (lambda h, c: lambda i: rng.integers(
+            -127, 128, (h, h, c)).astype(np.int32))(hw, ch)
+        entries[name] = (cm, mk)
+
+    rows = []
+    doc = {"models": {}, "fast": FAST,
+           "load_fractions": list(LOAD_FRACTIONS),
+           "shed_ceiling": SHED_CEILING}
+    for name, (cm, mk) in entries.items():
+        res = bench_model(name, cm, mk, n_queries)
+        doc["models"][name] = res
+        for c in res["curve"]:
+            rows.append(row(
+                f"serve/{name}/load{c['load_fraction']:.1f}",
+                c["p99_ms"] * 1e3,
+                offered_qps=f"{c['offered_qps']:.0f}",
+                achieved_qps=f"{c['achieved_qps']:.0f}",
+                p99_ms=f"{c['p99_ms']:.3f}",
+                budget_ms=f"{res['p99_budget_ms']:.1f}",
+                shed_rate=f"{c['shed_rate']:.3f}",
+                occupancy=f"{c['wave_occupancy']:.2f}",
+                met_slo=c["met_slo"],
+                bit_exact=c["bit_exact_vs_offline"]))
+        op = res["operating_point"]
+        rows.append(row(
+            f"serve/{name}/operating_point", 0.0,
+            micro_batch=res["micro_batch"],
+            budget_ms=f"{res['p99_budget_ms']:.1f}",
+            saturation_qps=f"{res['measured_saturation_qps']:.0f}",
+            qps_at_slo=("-" if op is None
+                        else f"{op['achieved_qps']:.0f}"),
+            at_load=("-" if op is None else op["load_fraction"])))
+    print_rows(rows)
+    emit_json("BENCH_serving.json", doc)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

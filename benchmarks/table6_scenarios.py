@@ -55,8 +55,9 @@ from repro.core.bops import schedule_cost
 from repro.core.qir import export_qcnn, export_qmlp
 from repro.deploy import compile_graph
 from repro.deploy.autotune import autotune_model, probe_streaming
-from repro.deploy.scenarios import offline, single_stream
+from repro.deploy.scenarios import offline, server_streaming, single_stream
 from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
+from repro.serve import measure_wave_service_s
 from repro.serving.engine import TinyModelServer
 
 IN_SCALE = 1.0 / 127.0
@@ -229,6 +230,7 @@ def run():
         scenario_json["streaming"].append({
             "model": name, "micro_batch": st_c.micro_batch,
             "block_h": cfg.block_h,
+            "block_mn": cfg.block_mn,
             "compiled_ms": t_cmp * 1e3, "host_ms": t_host * 1e3,
             "compiled_vs_host_speedup": speed,
             "modeled_cycles": cfg.modeled_cycles,
@@ -237,6 +239,26 @@ def run():
             "max_occupancy": st_h.max_occupancy,
             "segments": st_c.segments,
             "bit_exact_vs_offline": True})
+
+        # ServerStreaming: Poisson traffic through the dynamic batcher at
+        # ~0.7x the measured wave capacity, served from the same compiled
+        # segment programs — bit-exactness asserted padding included
+        # (serve_bench.py sweeps the full load curve; this is the smoke row)
+        svc_s = measure_wave_service_s(cm, st_c.micro_batch, iters=3)
+        sr = server_streaming(
+            cm, mk, qps=0.7 * st_c.micro_batch / svc_s,
+            n_queries=16 if FAST else 48,
+            max_wait_ms=max(2.0, 1.5 * svc_s * 1e3))
+        assert sr.extras["bit_exact_vs_offline"], name
+        stream_rows.append(row(
+            f"table6/{name}/ServerStreaming", sr.p99_ms * 1e3,
+            p50_ms=f"{sr.p50_ms:.3f}", p99_ms=f"{sr.p99_ms:.3f}",
+            qps=f"{sr.throughput_qps:.0f}",
+            offered_qps=f"{sr.extras['offered_qps']:.0f}",
+            micro_batch=sr.extras["micro_batch"],
+            wave_occupancy=f"{sr.extras['wave_occupancy']:.2f}",
+            bit_exact=sr.extras["bit_exact_vs_offline"]))
+        scenario_json["streaming"][-1]["server_streaming"] = sr.row()
     rows += stream_rows
     print_rows(rows)
 
@@ -249,8 +271,11 @@ def run():
     server.run_until_drained()
     st = server.stats()
     agg = st.pop("_aggregate")
-    tenants = " ".join(f"{n}:p99={v['p99_ms']:.1f}ms" for n, v in st.items())
-    print(f"multitenant: {agg['n']} reqs {agg['throughput_qps']:.0f} qps  {tenants}")
+    tenants = " ".join(
+        f"{n}:p99={v['p99_ms']:.1f}ms occ={v['wave_occupancy']:.2f}"
+        for n, v in st.items())
+    print(f"multitenant: {agg['n']} reqs {agg['throughput_qps']:.0f} qps "
+          f"(compiled wave path)  {tenants}")
     scenario_json["multitenant"] = {"n": agg["n"],
                                     "throughput_qps": agg["throughput_qps"]}
     emit_json("BENCH_scenarios.json", scenario_json)

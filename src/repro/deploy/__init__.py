@@ -69,6 +69,7 @@ from repro.deploy.scenarios import (  # noqa: F401
     offline,
     run_all_scenarios,
     server_poisson,
+    server_streaming,
     single_stream,
     streaming_pipeline,
 )

@@ -43,12 +43,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bops import conv_input_band_bytes, schedule_cost
-from repro.deploy.lower import FusedConvThresholdStage
+from repro.deploy.lower import FusedConvThresholdStage, FusedThresholdStage
 
-CONFIG_VERSION = 1
+CONFIG_VERSION = 2   # v2: + dense block_m/block_n (older caches re-search)
 
 #: Candidate micro-batch sizes (powers of two; filtered to <= batch).
 MICRO_CANDIDATES = (1, 2, 4, 8, 16, 32, 64)
+
+#: Candidate dense matmul blocks (powers of two; MXU-friendly).
+DENSE_BLOCK_CANDIDATES = (32, 64, 128, 256, 512)
 
 #: VMEM budget for the kernel's per-program working set (bytes). The band
 #: is charged twice — the grid pipeline double-buffers it.
@@ -90,6 +93,8 @@ class TunedConfig:
     modeled_traffic_bytes: float      # per-query schedule traffic (tuned)
     candidates: List[Dict] = dataclasses.field(default_factory=list)
     block_h_model: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    block_mn: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
+    block_mn_model: Dict[str, Dict] = dataclasses.field(default_factory=dict)
     seed_stage_ms: Optional[List[Dict]] = None   # stage_latencies seed
     probe_ms: Optional[Dict[str, float]] = None  # micro_batch -> median ms
     version: int = CONFIG_VERSION
@@ -103,6 +108,8 @@ class TunedConfig:
         d = {k: v for k, v in d.items() if k in fields}
         d["block_h"] = {str(k): int(v)
                         for k, v in (d.get("block_h") or {}).items()}
+        d["block_mn"] = {str(k): [int(v[0]), int(v[1])]
+                         for k, v in (d.get("block_mn") or {}).items()}
         return cls(**d)
 
 
@@ -217,6 +224,97 @@ def plan_block_h(geom, budget_bytes: int = VMEM_BUDGET_BYTES
 
 
 # ---------------------------------------------------------------------------
+# dense matmul blocks: pure model (same stance as block_h)
+# ---------------------------------------------------------------------------
+
+def plan_block_mn(in_dim: int, out_dim: int, n_steps: int = 255,
+                  wave_rows: int = TARGET_ROWS,
+                  budget_bytes: int = VMEM_BUDGET_BYTES,
+                  candidates: Sequence[int] = DENSE_BLOCK_CANDIDATES
+                  ) -> Dict[str, object]:
+    """Model-driven ``(block_m, block_n)`` for one fused dense stage.
+
+    ``wave_rows`` is the M the kernel will actually see — the autotuner
+    passes the tuned micro-batch, since the kernel row-pads the wave up to
+    ``block_m`` (an oversized row block is pure padding work).
+
+    The ``threshold_matmul`` grid re-streams tiles: each x row-block is
+    fetched once per *column* block and each w column-block once per *row*
+    block, so for a wave of ``wave_rows`` rows the streamed bytes are
+
+        ceil(N/bn) * M*K*4   (int32 activation codes)
+      + ceil(M/bm) * K*N     (int8 weight codes)
+      + ceil(M/bm) * N*S*4   (int32 threshold banks)
+
+    — bigger ``bn`` cuts the x term, bigger ``bm`` cuts the w/threshold
+    terms, and VMEM caps both: the double-buffered x and w tiles plus the
+    int32 accumulator block and the bank slice must fit the same budget
+    the conv ``block_h`` model uses. Ties break toward the MXU-native
+    128x128 tile. Returns the choice plus the scored candidate table.
+    """
+    m_ref = max(int(wave_rows), 1)
+    rows = []
+    best = None
+
+    def _key(r):
+        return (r["stream_bytes"],
+                abs(r["block_m"] - 128) + abs(r["block_n"] - 128))
+
+    for bm in sorted({int(b) for b in candidates}):
+        for bn in sorted({int(b) for b in candidates}):
+            n_row = -(-m_ref // bm)
+            n_col = -(-max(out_dim, 1) // bn)
+            stream = (n_col * m_ref * in_dim * 4.0
+                      + n_row * in_dim * out_dim * 1.0
+                      + n_row * out_dim * n_steps * 4.0)
+            vmem = (2 * 4 * bm * in_dim        # double-buffered x tile
+                    + 2 * 1 * in_dim * bn      # double-buffered w tile
+                    + 4 * bm * bn              # int32 accumulator
+                    + 4 * bn * n_steps)        # threshold bank slice
+            fits = vmem <= budget_bytes
+            rows.append({"block_m": bm, "block_n": bn,
+                         "stream_bytes": stream, "vmem_bytes": vmem,
+                         "fits_vmem": fits})
+            if fits and (best is None or _key(rows[-1]) < _key(best)):
+                best = rows[-1]
+    if best is None:              # nothing fits: smallest blocks
+        best = min(rows, key=lambda r: r["vmem_bytes"])
+    return {"block_m": int(best["block_m"]),
+            "block_n": int(best["block_n"]),
+            "stream_bytes": float(best["stream_bytes"]),
+            "candidates": rows}
+
+
+# ---------------------------------------------------------------------------
+# SLO-constrained micro-batch (the serve router's operating point)
+# ---------------------------------------------------------------------------
+
+def slo_micro_batch(cm, p99_budget_ms: float,
+                    stage_ms: Optional[List[Dict]] = None,
+                    probe_batch: int = 8,
+                    candidates: Sequence[int] = MICRO_CANDIDATES
+                    ) -> Dict[str, object]:
+    """Largest micro-batch whose modeled wave fill+drain fits the budget.
+
+    The throughput objective (``autotune_model``) picks the micro-batch
+    that drains an Offline pool fastest; a latency-budgeted server wants
+    the *largest wave that still finishes inside the p99 budget* — bigger
+    waves amortize dispatch overhead, but a full wave's service time lower-
+    bounds every member's latency. The service model is the serve stack's
+    (``repro.serve.slo.ServiceModel``): FIFO-model cycles calibrated to
+    seconds by a ``stage_latencies`` probe at ``probe_batch``.
+    """
+    from repro.serve.slo import ServiceModel, slo_operating_point
+
+    service = ServiceModel.from_compiled(cm, stage_ms=stage_ms,
+                                         probe_batch=probe_batch)
+    point = slo_operating_point(service, p99_budget_ms,
+                                candidates=candidates)
+    point["calibration"] = dict(service.calibration)
+    return point
+
+
+# ---------------------------------------------------------------------------
 # micro-batch: FIFO model first, measured refinement second
 # ---------------------------------------------------------------------------
 
@@ -313,6 +411,20 @@ def autotune_model(cm, batch: int = 64,
     winner = min(top, key=lambda d: (d.get("probe_ms", float("inf")),
                                      d["modeled_cycles"]))
 
+    # -- dense matmul blocks: pure model, at the winning wave size -------
+    # (the tuned blocks govern the kernel on streaming/serving waves of
+    # ``micro_batch`` rows; modeling a bigger reference M would pick a
+    # block_m the kernel then row-pads every wave up to)
+    block_mn: Dict[str, List[int]] = {}
+    block_mn_model: Dict[str, Dict] = {}
+    for s in cm.schedule.stages:
+        if isinstance(s, FusedThresholdStage):
+            plan = plan_block_mn(s.in_dim, s.out_dim,
+                                 n_steps=int(s.stage.thresholds.shape[1]),
+                                 wave_rows=int(winner["micro_batch"]))
+            block_mn[s.name] = [plan["block_m"], plan["block_n"]]
+            block_mn_model[s.name] = plan
+
     # traffic of the tuned schedule (block_h applied) — the modeled byte
     # number reported next to the choice
     saved = {s.name: s.block_h for s in cm.schedule.stages
@@ -336,6 +448,8 @@ def autotune_model(cm, batch: int = 64,
         modeled_traffic_bytes=traffic,
         candidates=modeled,
         block_h_model=block_h_model,
+        block_mn=block_mn,
+        block_mn_model=block_mn_model,
         seed_stage_ms=seed_stage_ms,
         probe_ms=probe_ms or None,
     )

@@ -62,6 +62,20 @@ from repro.deploy.lower import (
 DEFAULT_MICRO_BATCH = 16
 
 
+def stage_work(s) -> int:
+    """Per-sample element count driving the FIFO cost model for one stage:
+    ``fifo_work`` where the stage defines it (lowering-aware for convs),
+    MACs for matmul-like stages, in*out as the last resort. Shared by
+    ``plan_streaming`` and the serve-side service-time model
+    (``repro.serve.slo``) so the two never disagree about stage cost."""
+    work = getattr(s, "fifo_work", None)
+    if work is None:
+        work = getattr(s, "macs", None)
+    if work is None:
+        work = s.in_dim * s.out_dim
+    return int(work)
+
+
 def _on_tpu() -> bool:
     try:
         return jax.devices()[0].platform == "tpu"
@@ -121,13 +135,18 @@ class CompiledTinyModel:
 
     def apply_tuned(self, cfg) -> "CompiledTinyModel":
         """Adopt an autotuned config (``deploy.autotune.TunedConfig``): the
-        streaming default micro-batch and per-conv-stage ``block_h`` replace
-        the magic constants. Returns self for chaining."""
+        streaming default micro-batch, per-conv-stage ``block_h``, and
+        per-dense-stage ``block_m``/``block_n`` replace the magic
+        constants. Returns self for chaining."""
         for s in self.schedule.stages:
             if isinstance(s, FusedConvThresholdStage):
                 bh = cfg.block_h.get(s.name)
                 if bh is not None:
                     s.block_h = min(int(bh), s.geom.out_h)
+            elif isinstance(s, FusedThresholdStage):
+                mn = getattr(cfg, "block_mn", {}).get(s.name)
+                if mn is not None:
+                    s.block_m, s.block_n = int(mn[0]), int(mn[1])
         self.tuned = cfg
         self._rebuild()
         return self
@@ -232,14 +251,8 @@ class CompiledTinyModel:
         cached = self._plan_cache.get((n_micro, micro_batch))
         if cached is not None:
             return list(cached[0]), cached[1]
-        sim = []
-        for s in self.schedule.stages:
-            work = getattr(s, "fifo_work", None)
-            if work is None:
-                work = getattr(s, "macs", None)
-            if work is None:
-                work = s.in_dim * s.out_dim
-            sim.append(micro_batch_stage(s.name, work, micro_batch))
+        sim = [micro_batch_stage(s.name, stage_work(s), micro_batch)
+               for s in self.schedule.stages]
         res = optimize_fifo_depths(sim, n_tokens=n_micro)
         plan = (list(res["optimized_depths"]), int(res["optimized_cycles"]))
         self._plan_cache[(n_micro, micro_batch)] = plan
@@ -321,6 +334,60 @@ class CompiledTinyModel:
 
     # the historical name stays pointed at the observable reference path
     streaming = streaming_host
+
+    # -- wave submission (the serve router's entry point) ------------------
+    def submit_wave(self, x_int, valid: Optional[Sequence[bool]] = None,
+                    micro_batch: Optional[int] = None
+                    ) -> Tuple[jnp.ndarray, np.ndarray]:
+        """Run ONE (possibly partially filled) micro-batch wave.
+
+        The dynamic batcher (``repro.serve.router``) coalesces arriving
+        requests into waves of at most ``micro_batch`` samples and cannot
+        always fill a wave before its deadline — so this entry point accepts
+        ``n <= micro_batch`` rows plus an optional ``valid`` mask, zero-pads
+        up to the wave size (code 0 is value 0 under the export contract, so
+        padding rows are inert), and pushes the wave through the SAME
+        compiled segment programs as ``streaming_compiled`` (shape
+        ``(1, micro_batch, ...)`` — one jit program per segment, compiled
+        once per wave size). Returns ``(y, mask)`` where ``y`` covers the
+        full wave and ``mask`` marks the rows that carry real queries;
+        ``y[mask]`` is bit-identical to ``offline`` on the valid rows.
+
+        The padding contract: invalid rows are forced to zero codes *before*
+        execution (whatever the caller left in them), and nothing about an
+        invalid row can perturb a valid one — stages are row-independent
+        (matmul/conv/threshold act per sample), which the golden-model
+        padded-wave tests assert.
+        """
+        mb = int(micro_batch) if micro_batch else self.default_micro_batch
+        xb = np.asarray(x_int)
+        n = xb.shape[0]
+        if n > mb:
+            raise ValueError(f"wave of {n} rows exceeds micro_batch={mb}")
+        mask = np.ones(n, bool) if valid is None \
+            else np.asarray(valid, bool).reshape(-1)
+        if mask.shape[0] != n:
+            raise ValueError(f"valid mask has {mask.shape[0]} entries "
+                             f"for a wave of {n} rows")
+        mask = np.concatenate([mask, np.zeros(mb - n, bool)])
+        # pad + zero invalid rows on the HOST: the device only ever sees
+        # the one constant (1, mb, ...) wave shape, so a lane serving
+        # every fill level reuses a single compiled program — eager
+        # device-side padding would trace a new program per fill level,
+        # which is a mid-serve compile stall (a measured 20x wave-time
+        # tail before this was moved host-side)
+        buf = np.zeros((mb,) + xb.shape[1:], xb.dtype)
+        buf[:n][mask[:n]] = xb[mask[:n]]
+        wave = jnp.asarray(buf[None])
+        for k, seg in enumerate(self.segments):
+            if seg.compiled:
+                wave = self._segment_fn(k)(wave)
+            else:
+                h = wave[0]
+                for si in range(seg.start, seg.stop):
+                    h = self._stage_fns[si](h)
+                wave = h[None]
+        return wave[0], mask
 
     # -- streaming, compiled (the deployment hot path) ---------------------
     def _segment_fn(self, k: int) -> Callable:

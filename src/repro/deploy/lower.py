@@ -144,6 +144,8 @@ class FusedThresholdStage:
     in_bits: int = 8
     mm_float: bool = False   # exact float32 GEMM path (see _float_mm_safe)
     affine: Optional[tuple] = None   # exact O(1) activation (see _apply_act)
+    block_m: Optional[int] = None    # tuned kernel row block (None = default)
+    block_n: Optional[int] = None    # tuned kernel col block (None = default)
 
     @property
     def out_scale(self) -> float:
@@ -178,6 +180,7 @@ class FusedThresholdStage:
         # negative under an int8 cast. The kernel takes either width.
         return ops.threshold_matmul(
             x_int.astype(jnp.int32), self.stage.w_int, self.stage.thresholds,
+            block_m=self.block_m or 128, block_n=self.block_n or 128,
             interpret=interpret)
 
 

@@ -1,0 +1,47 @@
+"""Injectable clocks for the serve runtime.
+
+Every serve component reads time through one of these objects instead of
+the ``time`` module, so the whole server — batching deadlines, SLO
+estimates, sliding-window metrics, trace replay — runs identically under
+the real monotonic clock and under a test-controlled manual clock (the
+same trick ``tests/test_scenarios.py`` plays on the scenario runtime, made
+first-class here because the router's correctness *is* its timing).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+class SystemClock:
+    """The real monotonic clock."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+
+
+class ManualClock:
+    """Deterministic clock: time moves only when told to.
+
+    ``sleep`` advances instead of blocking, so trace replay under a
+    ManualClock is an exact discrete-event simulation — every latency the
+    metrics report is reproducible arithmetic, not wall-clock noise.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def now(self) -> float:
+        return self.t
+
+    def sleep(self, seconds: float) -> None:
+        assert seconds >= 0, seconds
+        self.t += seconds
+
+    def advance(self, seconds: float) -> None:
+        assert seconds >= 0, seconds
+        self.t += seconds

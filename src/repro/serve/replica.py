@@ -1,0 +1,102 @@
+"""Replica pool: one compiled schedule per device, least-work placement.
+
+The hls4ml platform framing — a dataflow accelerator as a *shared* serving
+engine — maps here to one compiled executor per available ``jax.device()``.
+Each replica owns its own ``CompiledTinyModel`` (jit caches are
+per-instance, so replicas never contend on compilation) pinned to one
+device, and the pool places each wave on the replica with the least
+outstanding modeled work — the queueing-theory argument for
+join-shortest-queue over round-robin under heterogeneous wave sizes.
+
+On the CPU container there is exactly one device; the pool degenerates to
+a single replica and the placement logic is exercised by the tests through
+fake executors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Replica:
+    """One executor instance bound to one device."""
+
+    index: int
+    model: object                 # anything with submit_wave(...) -> (y, mask)
+    device: Optional[object] = None
+    outstanding_s: float = 0.0    # modeled seconds of work placed, not done
+    n_dispatched: int = 0
+
+    def run_wave(self, x, valid=None, micro_batch: Optional[int] = None):
+        """Run one padded wave on this replica's device; blocks until the
+        result is ready so the caller's clock reading is the completion."""
+        if self.device is not None:
+            x = jax.device_put(np.asarray(x), self.device)
+        y, mask = self.model.submit_wave(x, valid=valid,
+                                         micro_batch=micro_batch)
+        return jax.block_until_ready(y), mask
+
+
+class ReplicaPool:
+    """Replicas of one model across devices, placed by least work.
+
+    ``factory`` builds a fresh executor per device (e.g.
+    ``lambda: compile_graph(graph, ...)``); when only ``model`` is given
+    the pool has that single replica (the CPU case). The first replica
+    reuses ``model`` so single-device callers pay zero extra compiles.
+    """
+
+    def __init__(self, model=None, *,
+                 factory: Optional[Callable[[], object]] = None,
+                 devices: Optional[Sequence[object]] = None):
+        if model is None and factory is None:
+            raise ValueError("need a model or a factory")
+        if devices is None:
+            devices = jax.devices() if factory is not None else [None]
+        if not devices:
+            raise ValueError("no devices to place replicas on")
+        if len(devices) > 1 and factory is None:
+            raise ValueError(
+                f"{len(devices)} devices but no factory: replicas beyond "
+                "the first need their own executor (jit caches are "
+                "per-instance) — pass factory=lambda: compile_graph(...)")
+        self.replicas: List[Replica] = []
+        for i, dev in enumerate(devices):
+            m = model if (i == 0 and model is not None) else factory()
+            self.replicas.append(Replica(index=i, model=m, device=dev))
+
+    @property
+    def default_micro_batch(self) -> int:
+        m = self.replicas[0].model
+        return int(getattr(m, "default_micro_batch", 1))
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    def place(self, work_s: float = 0.0) -> Replica:
+        """Pick the least-outstanding-work replica and charge it the wave's
+        modeled service time; ``complete`` credits it back. Equal-work ties
+        break to the replica that has dispatched fewest waves (round-robin
+        under uniform load), then to index."""
+        r = min(self.replicas,
+                key=lambda r: (r.outstanding_s, r.n_dispatched, r.index))
+        r.outstanding_s += float(work_s)
+        r.n_dispatched += 1
+        return r
+
+    def complete(self, replica: Replica, work_s: float = 0.0) -> None:
+        replica.outstanding_s = max(0.0, replica.outstanding_s
+                                    - float(work_s))
+
+    def stats(self) -> List[dict]:
+        return [{"replica": r.index,
+                 "device": str(r.device) if r.device is not None else "local",
+                 "dispatched": r.n_dispatched,
+                 "outstanding_s": r.outstanding_s}
+                for r in self.replicas]

@@ -1,0 +1,314 @@
+"""The dynamic batcher: request traffic in, compiled segment waves out.
+
+This is the runtime that was missing between individual requests and the
+PR-4 compiled streaming pipeline. Per model ("lane") the router keeps a
+pending queue and two dispatch triggers:
+
+  * **full wave** — the moment ``micro_batch`` requests (the autotuned wave
+    size by default) are queued, they leave as one wave;
+  * **deadline flush** — the oldest pending request never waits longer than
+    ``max_wait_ms``: when the deadline passes, the partial wave leaves
+    anyway, zero-padded through the executor's ``submit_wave`` padding-mask
+    contract (padded rows are inert; valid rows stay bit-exact vs
+    ``offline``).
+
+Waves are placed on a ``ReplicaPool`` by least outstanding work, and an
+optional ``SLOController`` sheds arrivals whose estimated completion
+would blow the per-model p99 budget. All timing goes through an
+injectable clock, so the router is an exact discrete-event system under
+``ManualClock`` — the property the hand-simulated-trace tests exploit —
+and a real server under ``SystemClock``.
+
+Typical use (the ``ServerStreaming`` scenario, the serve bench, and the
+``TinyModelServer`` compatibility shim are all thin wrappers over this):
+
+    router = Router({"ic": cm}, RouterConfig(max_wait_ms=2.0,
+                                             p99_budget_ms=50.0))
+    done = router.run_trace("ic", poisson_trace(qps, n), make_query)
+    print(router.stats()["ic"]["metrics"])
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Deque, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.serve.clock import SystemClock
+from repro.serve.metrics import ServeMetrics
+from repro.serve.replica import ReplicaPool
+from repro.serve.slo import ServiceModel, SLOController
+from repro.serve.traffic import Trace
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One inference request as the router tracks it."""
+
+    uid: int
+    model: str
+    x: np.ndarray
+    arrival_t: float
+    done_t: float = 0.0
+    result: Optional[np.ndarray] = None
+    shed: bool = False
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_t - self.arrival_t
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    """Per-model routing policy.
+
+    ``micro_batch=None`` consumes the executor's (autotuned) default wave
+    size; ``p99_budget_ms=None`` disables shedding (every request is
+    admitted). ``slo_headroom`` scales the budget the admission test uses
+    (0.8 = shed at 80% of budget, keeping margin for estimate error).
+    """
+
+    max_wait_ms: float = 2.0
+    micro_batch: Optional[int] = None
+    p99_budget_ms: Optional[float] = None
+    slo_headroom: float = 1.0
+    window_s: float = 30.0
+    #: False = never dispatch from inside ``submit`` (a full wave waits for
+    #: the next ``step``/``dispatch_one``) — the explicitly-stepped
+    #: compatibility mode the ``TinyModelServer`` shim runs in.
+    auto_dispatch: bool = True
+
+
+class _Lane:
+    """Internal per-model state: pool + queue + policy + metrics."""
+
+    def __init__(self, name: str, pool: ReplicaPool, cfg: RouterConfig,
+                 slo: Optional[SLOController], start_t: float):
+        self.name = name
+        self.pool = pool
+        self.cfg = cfg
+        self.slo = slo
+        self.pending: Deque[ServeRequest] = collections.deque()
+        self.metrics = ServeMetrics(window_s=cfg.window_s, start_t=start_t)
+        self.micro_batch = int(cfg.micro_batch
+                               or pool.default_micro_batch or 1)
+
+    def deadline(self) -> Optional[float]:
+        if not self.pending:
+            return None
+        return self.pending[0].arrival_t + self.cfg.max_wait_ms / 1e3
+
+
+class Router:
+    """Dynamic-batching front end over compiled executors.
+
+    ``models`` maps name -> executor (``CompiledTinyModel`` or anything
+    with ``submit_wave``/``default_micro_batch``) or a prebuilt
+    ``ReplicaPool``. ``config`` is one ``RouterConfig`` for every model or
+    a per-model dict. ``service_models`` supplies the SLO service-time
+    model per name; when omitted and a p99 budget is set, it is built from
+    the compiled schedule (``ServiceModel.from_compiled`` — FIFO cost
+    model calibrated by a ``stage_latencies`` probe).
+    """
+
+    def __init__(self, models: Dict[str, object],
+                 config: Union[RouterConfig, Dict[str, RouterConfig], None]
+                 = None,
+                 clock: Optional[object] = None,
+                 service_models: Optional[Dict[str, ServiceModel]] = None):
+        self.clock = clock if clock is not None else SystemClock()
+        self._uid = 0
+        self.lanes: Dict[str, _Lane] = {}
+        now = self.clock.now()
+        for name, model in models.items():
+            cfg = (config.get(name, RouterConfig())
+                   if isinstance(config, dict)
+                   else (config or RouterConfig()))
+            pool = model if isinstance(model, ReplicaPool) \
+                else ReplicaPool(model)
+            slo = None
+            if cfg.p99_budget_ms is not None:
+                service = (service_models or {}).get(name)
+                if service is None:
+                    service = ServiceModel.from_compiled(
+                        pool.replicas[0].model)
+                slo = SLOController(cfg.p99_budget_ms, service,
+                                    window_s=cfg.window_s,
+                                    headroom=cfg.slo_headroom)
+            self.lanes[name] = _Lane(name, pool, cfg, slo, start_t=now)
+
+    # -- submission --------------------------------------------------------
+    def submit(self, model: str, x, arrival_t: Optional[float] = None
+               ) -> ServeRequest:
+        """Admit (or shed) one request; a full wave dispatches in-line."""
+        lane = self._lane(model)
+        now = self.clock.now() if arrival_t is None else float(arrival_t)
+        req = ServeRequest(uid=self._uid, model=model, x=np.asarray(x),
+                           arrival_t=now)
+        self._uid += 1
+        if lane.slo is not None:
+            lane.slo.observe_arrival(now)
+            backlog_waves = len(lane.pending) // lane.micro_batch
+            # a request admitted late (the server was busy past its arrival
+            # time) has already burned budget: the admission estimate must
+            # carry that lag, or an overloaded single-worker lane would
+            # never shed — its pending queue stays short while the clock
+            # falls behind the trace
+            lag_s = max(self.clock.now() - now, 0.0)
+            if not lane.slo.admit(now, backlog_waves, lane.micro_batch,
+                                  lane.cfg.max_wait_ms / 1e3, lag_s=lag_s):
+                req.shed = True
+                lane.metrics.record_shed(now)
+                return req
+        lane.metrics.record_admit(now)
+        lane.pending.append(req)
+        if lane.cfg.auto_dispatch:
+            while len(lane.pending) >= lane.micro_batch:
+                self._dispatch(lane, lane.micro_batch)
+        return req
+
+    def _lane(self, model: str) -> _Lane:
+        lane = self.lanes.get(model)
+        if lane is None:
+            raise KeyError(f"unknown model {model!r}; "
+                           f"lanes: {sorted(self.lanes)}")
+        return lane
+
+    # -- dispatch ----------------------------------------------------------
+    def _dispatch(self, lane: _Lane, n: int) -> int:
+        """Pop up to ``n`` requests and run them as one padded wave."""
+        n = min(n, len(lane.pending))
+        if n == 0:
+            return 0
+        reqs = [lane.pending.popleft() for _ in range(n)]
+        mb = lane.micro_batch
+        work_s = (lane.slo.wave_service_s(mb) if lane.slo is not None
+                  else 0.0)
+        replica = lane.pool.place(work_s)
+        xb = np.stack([r.x for r in reqs])
+        t0 = self.clock.now()
+        y, mask = replica.run_wave(xb, micro_batch=mb)
+        done = self.clock.now()
+        lane.pool.complete(replica, work_s)
+        y = np.asarray(y)
+        assert mask[:n].all() and not mask[n:].any(), mask
+        for i, r in enumerate(reqs):
+            r.result = y[i]
+            r.done_t = done
+            lane.metrics.record_completion(done, done - r.arrival_t)
+        lane.metrics.record_wave(done, n, mb)
+        if lane.slo is not None:
+            lane.slo.observe_service(mb, done - t0)
+        return n
+
+    # -- event loop hooks --------------------------------------------------
+    def step(self, now: Optional[float] = None) -> int:
+        """Dispatch every lane whose wave is full or whose oldest pending
+        request has hit the max-wait deadline. Returns #requests served."""
+        now = self.clock.now() if now is None else now
+        served = 0
+        for lane in self.lanes.values():
+            while len(lane.pending) >= lane.micro_batch:
+                served += self._dispatch(lane, lane.micro_batch)
+            dl = lane.deadline()
+            if dl is not None and now >= dl:
+                served += self._dispatch(lane, lane.micro_batch)
+        return served
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest pending batch deadline across lanes (None when idle)."""
+        dls = [d for d in (lane.deadline() for lane in self.lanes.values())
+               if d is not None]
+        return min(dls) if dls else None
+
+    def dispatch_one(self, model: str, max_n: Optional[int] = None) -> int:
+        """Dispatch at most one (possibly partial) wave for one lane —
+        the explicit-stepping hook the ``TinyModelServer`` shim drives."""
+        lane = self._lane(model)
+        n = lane.micro_batch if max_n is None else min(int(max_n),
+                                                       lane.micro_batch)
+        return self._dispatch(lane, n)
+
+    def flush(self, model: Optional[str] = None) -> int:
+        """Force-dispatch pending requests (partial waves included)."""
+        lanes = [self._lane(model)] if model else list(self.lanes.values())
+        served = 0
+        for lane in lanes:
+            while lane.pending:
+                served += self._dispatch(lane, lane.micro_batch)
+        return served
+
+    def drain(self) -> int:
+        """Flush everything; the end-of-trace barrier."""
+        return self.flush()
+
+    # -- trace replay ------------------------------------------------------
+    def run_trace(self, model: str, trace: Trace,
+                  make_query: Callable[[int], np.ndarray]
+                  ) -> List[ServeRequest]:
+        """Replay an arrival trace against one lane in (clock) real time.
+
+        Between arrivals the router sleeps only as far as the next batch
+        deadline, so deadline flushes fire at the right moment even in
+        arrival gaps. Under a ``ManualClock`` this loop is an exact
+        simulation: sleeps advance the clock instantly and service time is
+        whatever the executor (or a scripted fake) makes of it.
+        """
+        t0 = self.clock.now()
+        out: List[ServeRequest] = []
+        arr = np.asarray(trace.arrivals)
+        i = 0
+        while i < len(arr):
+            target = t0 + float(arr[i])
+            if self.clock.now() >= target:
+                # due (or late) arrival: submit before stepping. While the
+                # server was busy these requests were conceptually queuing
+                # — admitting the whole late burst first lets it coalesce
+                # into full waves, as it would in a threaded server, and
+                # ``arrival_t=target`` keeps the blocked wait on the books.
+                out.append(self.submit(model, make_query(i),
+                                       arrival_t=target))
+                i += 1
+                continue
+            self.step()
+            dl = self.next_deadline()
+            if dl is not None and dl < target:
+                self.clock.sleep(max(dl - self.clock.now(), 0.0))
+                self.step()
+            else:
+                self.clock.sleep(max(target - self.clock.now(), 0.0))
+        # drain the tail: honour remaining deadlines, then flush
+        dl = self.next_deadline()
+        while dl is not None:
+            self.clock.sleep(max(dl - self.clock.now(), 0.0))
+            self.step()
+            dl = self.next_deadline()
+        self.drain()
+        return out
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> Dict[str, Dict]:
+        """Per-lane snapshot: metrics window + SLO estimates + replicas."""
+        now = self.clock.now()
+        out: Dict[str, Dict] = {}
+        for name, lane in self.lanes.items():
+            snap = lane.metrics.snapshot(now)
+            d = {"metrics": snap, "micro_batch": lane.micro_batch,
+                 "pending": len(lane.pending),
+                 "replicas": lane.pool.stats()}
+            if lane.slo is not None:
+                d["slo"] = {
+                    "p99_budget_ms": lane.slo.p99_budget_ms,
+                    "wave_service_ms":
+                        lane.slo.wave_service_s(lane.micro_batch) * 1e3,
+                    "arrival_qps": lane.slo.arrival_qps(now),
+                    "utilization":
+                        lane.slo.utilization(now, lane.micro_batch),
+                    "occupancy_estimate": lane.slo.occupancy_estimate(
+                        now, lane.micro_batch,
+                        lane.cfg.max_wait_ms / 1e3),
+                }
+            out[name] = d
+        return out

@@ -190,24 +190,57 @@ class TinyRequest:
     result: Optional[np.ndarray] = None
 
 
+class _OfflineWaveAdapter:
+    """Wave API for legacy tenants that only expose ``offline(batch)``.
+
+    The router dispatches through ``submit_wave``; a tenant without one
+    (an arbitrary research model behind ``CompiledJaxModel``, say) gets
+    this adapter: no padding, the wave is just the batch, every row valid.
+    """
+
+    def __init__(self, model: Any):
+        self.model = model
+        self.default_micro_batch = 1
+
+    def submit_wave(self, x, valid=None, micro_batch=None):
+        y = self.model.offline(jnp.asarray(np.asarray(x)))
+        n = np.asarray(x).shape[0]
+        mask = np.ones(n, bool) if valid is None else np.asarray(valid, bool)
+        return y, mask
+
+
 class TinyModelServer:
     """All Table-1 tiny models served concurrently from one shared queue.
 
-    The LM engine above batches sequences into decode slots; the tiny-model
-    analogue batches same-model requests into one ``offline`` call per step.
-    Tenants are compiled deployments (``repro.deploy`` executors, or anything
-    exposing ``offline(batch) -> outputs``); each engine step drains up to
-    ``max_batch`` queued requests *per tenant*, so a burst on one model
-    cannot starve the others — the slot fairness idea applied across models
-    instead of across sequences.
+    Since the ``repro.serve`` subsystem landed, this class is a
+    *compatibility shim* over the dynamic-batching router: the legacy API
+    (``submit``/``step``/``run_until_drained``/``stats``) is unchanged, but
+    every batch now dispatches through the executor's compiled segment
+    waves (``CompiledTinyModel.submit_wave`` — the PR-4 streaming path)
+    instead of a bare ``offline`` call, with one router lane per tenant so
+    a burst on one model cannot starve the others. Tenants without a wave
+    API still work through ``_OfflineWaveAdapter``. New code should use
+    ``repro.serve.Router`` directly (SLO admission, deadline batching,
+    replica placement, sliding-window metrics live there).
     """
 
     def __init__(self, models: Dict[str, Any], max_batch: int = 32):
+        from repro.serve import Router, RouterConfig
+
         self.models = dict(models)
         self.max_batch = max_batch
         self.queue: List[TinyRequest] = []
         self.finished: List[TinyRequest] = []
         self._uid = 0
+        # explicitly-stepped router: waves of up to max_batch per tenant,
+        # dispatched only from step() (legacy drain semantics, no deadline)
+        self.router = Router(
+            {name: (m if hasattr(m, "submit_wave")
+                    else _OfflineWaveAdapter(m))
+             for name, m in self.models.items()},
+            RouterConfig(micro_batch=max_batch, auto_dispatch=False,
+                         max_wait_ms=0.0))
+        self._routed: Dict[int, Any] = {}   # TinyRequest.uid -> ServeRequest
 
     def submit(self, model: str, x: np.ndarray) -> TinyRequest:
         if model not in self.models:
@@ -217,30 +250,27 @@ class TinyModelServer:
                           submit_t=time.monotonic())
         self._uid += 1
         self.queue.append(req)
+        self._routed[req.uid] = self.router.submit(model, req.x,
+                                                   arrival_t=req.submit_t)
         return req
 
     def step(self) -> int:
-        """Admit and run one batch per tenant; returns #requests served."""
+        """Run one wave per tenant; returns #requests served."""
         served = 0
-        by_model: Dict[str, List[TinyRequest]] = {}
-        remaining: List[TinyRequest] = []
-        for req in self.queue:
-            group = by_model.setdefault(req.model, [])
-            if len(group) < self.max_batch:
-                group.append(req)
-            else:
-                remaining.append(req)
-        self.queue = remaining
-        for name, group in by_model.items():
-            xb = jnp.asarray(np.stack([r.x for r in group]))
-            yb = np.asarray(jax.block_until_ready(
-                self.models[name].offline(xb)))
-            now = time.monotonic()
-            for r, y in zip(group, yb):
-                r.result = y
-                r.done_t = now
-                self.finished.append(r)
-            served += len(group)
+        for name in self.models:
+            served += self.router.dispatch_one(name, max_n=self.max_batch)
+        if served:
+            still: List[TinyRequest] = []
+            for req in self.queue:
+                routed = self._routed[req.uid]
+                if routed.result is not None:
+                    req.result = np.asarray(routed.result)
+                    req.done_t = routed.done_t
+                    self.finished.append(req)
+                    del self._routed[req.uid]
+                else:
+                    still.append(req)
+            self.queue = still
         return served
 
     def run_until_drained(self, max_steps: int = 10_000) -> int:
@@ -251,12 +281,14 @@ class TinyModelServer:
         return steps
 
     def stats(self) -> Dict[str, Dict[str, float]]:
-        """Per-tenant and aggregate latency/throughput."""
+        """Per-tenant and aggregate latency/throughput (legacy shape, plus
+        the router's wave occupancy per tenant)."""
         if not self.finished:
             return {}
         out: Dict[str, Dict[str, float]] = {}
         span = (max(r.done_t for r in self.finished)
                 - min(r.submit_t for r in self.finished))
+        router_stats = self.router.stats()
         for name in self.models:
             lats = [r.done_t - r.submit_t for r in self.finished
                     if r.model == name]
@@ -266,6 +298,8 @@ class TinyModelServer:
                 "n": len(lats),
                 "p50_ms": float(np.percentile(lats, 50) * 1e3),
                 "p99_ms": float(np.percentile(lats, 99) * 1e3),
+                "wave_occupancy":
+                    router_stats[name]["metrics"].mean_occupancy,
             }
         out["_aggregate"] = {
             "n": len(self.finished),

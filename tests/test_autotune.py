@@ -16,15 +16,19 @@ import jax.numpy as jnp
 from repro.core.qir import export_qcnn, export_qmlp
 from repro.deploy import FusedConvThresholdStage, compile_graph
 from repro.deploy.autotune import (
+    CONFIG_VERSION,
     TunedConfig,
+    VMEM_BUDGET_BYTES,
     autotune_enabled,
     autotune_model,
     block_h_candidates,
     config_path,
     load_config,
     plan_block_h,
+    plan_block_mn,
     save_config,
     schedule_key,
+    slo_micro_batch,
 )
 from repro.models.tiny import ICModel, KWSMLP
 
@@ -101,12 +105,24 @@ def test_config_dict_round_trip():
                       block_h={"conv0": 4}, fifo_depths=[2, 2, 3],
                       modeled_cycles=123, modeled_traffic_bytes=456.5,
                       candidates=[{"micro_batch": 8, "modeled_cycles": 123}],
+                      block_mn={"dense0": [256, 128]},
                       probe_ms={"8": 1.25})
     assert TunedConfig.from_dict(cfg.to_dict()) == cfg
     # unknown keys from future schemas are dropped, not fatal
     d = cfg.to_dict()
     d["new_field"] = "x"
     assert TunedConfig.from_dict(d) == cfg
+
+
+def test_stale_config_version_re_searches(tmp_path):
+    """A cached config from an older schema (no dense blocks) must be
+    ignored, not half-applied."""
+    cfg = TunedConfig(key="stale", platform="cpu", micro_batch=8,
+                      block_h={}, fifo_depths=[2, 2],
+                      modeled_cycles=1, modeled_traffic_bytes=1.0)
+    cfg.version = CONFIG_VERSION - 1
+    save_config(cfg, str(tmp_path))
+    assert load_config("stale", str(tmp_path)) is None
 
 
 def test_apply_tuned_replaces_magic_constants_bit_exactly(tmp_path):
@@ -154,6 +170,70 @@ def test_plan_block_h_respects_vmem_and_breaks_ties_to_target():
     assert small < 32
     cands = plan_block_h(g2)["candidates"]
     assert [c["block_h"] for c in cands] == block_h_candidates(32)
+
+
+def test_plan_block_mn_respects_vmem_and_breaks_ties_to_mxu():
+    """The dense-block model: streamed bytes fall as blocks grow, VMEM
+    caps the growth, and byte ties break toward the 128x128 MXU tile."""
+    plan = plan_block_mn(490, 128, n_steps=7)
+    assert plan["block_n"] == 128          # out_dim 128: one column block
+    assert plan["block_m"] >= 128          # bigger bm cuts w/threshold bytes
+    fits = [c for c in plan["candidates"] if c["fits_vmem"]]
+    assert plan["stream_bytes"] == min(c["stream_bytes"] for c in fits)
+    # a tiny budget forces small blocks; an impossible one falls back
+    small = plan_block_mn(490, 128, n_steps=7, budget_bytes=1 << 14)
+    assert (small["block_m"], small["block_n"]) < (plan["block_m"], 512)
+    assert all(not c["fits_vmem"]
+               for c in plan_block_mn(4096, 4096, n_steps=255,
+                                      budget_bytes=1 << 10)["candidates"])
+    # the w/threshold byte terms strictly fall with block_m at fixed bn
+    rows = {(c["block_m"], c["block_n"]): c["stream_bytes"]
+            for c in plan["candidates"]}
+    assert rows[(256, 128)] < rows[(32, 128)]
+
+
+def test_autotune_tunes_dense_blocks_bit_exactly(tmp_path):
+    """v2 configs carry block_mn for every fused dense stage; applying
+    them reconfigures the kernel blocks without changing any integers
+    (including through the Pallas interpret path that consumes them)."""
+    cm = _mlp_compiled()
+    probe = _fixed_probe({mb: 0.005 for mb in (1, 2, 4, 8, 16, 32, 64)})
+    cfg = autotune_model(cm, batch=16, probe=probe,
+                         directory=str(tmp_path), force=True)
+    dense = [s for s in cm.schedule.stages
+             if type(s).__name__ == "FusedThresholdStage"]
+    assert dense and set(cfg.block_mn) == {s.name for s in dense}
+    assert all(name in cfg.block_mn_model for name in cfg.block_mn)
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.integers(-127, 128, (5, 490)), jnp.int32)
+    y_before = np.asarray(cm.offline(x))
+    cm.apply_tuned(cfg)
+    assert all([s.block_m, s.block_n] == cfg.block_mn[s.name]
+               for s in dense)
+    np.testing.assert_array_equal(np.asarray(cm.offline(x)), y_before)
+    # kernel path (interpret mode) consumes the tuned blocks, same integers
+    cmk = compile_graph(cm.graph, in_scale=IN_SCALE, use_pallas=True,
+                        interpret=True)
+    cmk.apply_tuned(cfg)
+    np.testing.assert_array_equal(np.asarray(cmk.offline(x)), y_before)
+    # the cache round-trips the new fields exactly
+    assert load_config(cfg.key, str(tmp_path)) == cfg
+
+
+def test_slo_micro_batch_grows_with_the_budget():
+    """The SLO-constrained objective: a bigger latency budget admits a
+    wave at least as large, and the chosen wave's modeled service fits."""
+    cm = _mlp_compiled()
+    pts = [slo_micro_batch(cm, b) for b in (0.001, 5.0, 5000.0)]
+    mbs = [p["micro_batch"] for p in pts]
+    assert mbs == sorted(mbs)
+    assert pts[-1]["micro_batch"] == 64      # huge budget: biggest candidate
+    assert pts[-1]["fits_budget"]
+    assert pts[-1]["service_ms"] <= 5000.0
+    assert pts[-1]["calibration"]["probe_batch"] == 8
+    for p in pts:
+        assert [c["micro_batch"] for c in p["candidates"]] == \
+            sorted(c["micro_batch"] for c in p["candidates"])
 
 
 def test_compile_graph_autotune_flag_and_env_knobs(tmp_path, monkeypatch):

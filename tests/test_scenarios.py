@@ -21,6 +21,7 @@ from repro.deploy.scenarios import (
     multi_stream,
     offline,
     server_poisson,
+    server_streaming,
     single_stream,
     streaming_pipeline,
 )
@@ -145,6 +146,112 @@ def test_server_poisson_latency_is_queueing_plus_service(clock):
     assert rep.extras["offered_qps"] == qps
     assert rep.throughput_qps == pytest.approx(
         n / (done - arrivals[0]))
+
+
+def test_server_poisson_reuses_warm_program_per_query(clock):
+    """Satellite: the Poisson loop must pre-materialize every query and
+    run exactly warmup + 1 discarded-warm + n_queries inferences — the
+    compile/warm work happens before the clock starts, never per query."""
+    calls = []
+
+    def infer(x):
+        calls.append(np.asarray(x).shape)
+        clock.advance(0.002)
+        return np.zeros((1, 2), np.float32)
+
+    made = []
+    def mk(i):
+        made.append(i)
+        return np.zeros((4,), np.int32)
+
+    rep = server_poisson(infer, mk, qps=400.0, n_queries=6, seed=1,
+                         warmup=2)
+    assert len(calls) == 2 + 1 + 6          # warmup, discarded warm, timed
+    assert all(s == (1, 4) for s in calls)  # pre-batched (1, d) queries
+    assert made == list(range(6))           # pool built once, up front
+    assert rep.n_queries == 6
+
+
+def test_server_streaming_exact_accounting_under_fake_clock(clock):
+    """ServerStreaming through the real router under the fake clock: a
+    zero-service wave executor makes every latency pure batching wait,
+    reproduced here by an independent simulation of the documented
+    contract (pairs dispatch on fill, partial waves at the deadline)."""
+    waves = []
+
+    class FakeCompiled:
+        default_micro_batch = 2
+
+        def submit_wave(self, x, valid=None, micro_batch=None):
+            mb = int(micro_batch or self.default_micro_batch)
+            n = np.asarray(x).shape[0]
+            waves.append(n)
+            mask = np.concatenate([np.ones(n, bool), np.zeros(mb - n, bool)])
+            return np.zeros((mb, 2), np.float32), mask
+
+    qps, n, seed, wait_ms = 250.0, 9, 4, 6.0
+    rep = server_streaming(FakeCompiled(), _mk, qps=qps, n_queries=n,
+                           seed=seed, max_wait_ms=wait_ms, micro_batch=2,
+                           warmup=1)
+    # independent reference: same arrivals (same seed), same batching rules
+    arrivals = np.cumsum(
+        np.random.default_rng(seed).exponential(1.0 / qps, n))
+    w = wait_ms / 1e3
+    expect, exp_waves, pending = [], [], []
+    for a in arrivals:
+        while pending and pending[0] + w < a:      # deadline flush first
+            t = pending[0] + w
+            expect.extend(t - p for p in pending)
+            exp_waves.append(len(pending))
+            pending = []
+        pending.append(a)
+        if len(pending) == 2:                      # full wave on fill
+            expect.extend(a - p for p in pending)
+            exp_waves.append(2)
+            pending = []
+    if pending:                                    # tail: deadline flush
+        t = pending[0] + w
+        expect.extend(t - p for p in pending)
+        exp_waves.append(len(pending))
+    expect_ms = np.asarray(sorted(expect)) * 1e3
+    assert waves[1:] == exp_waves                  # waves[0] is the warmup
+    assert rep.scenario == "ServerStreaming"
+    assert rep.n_queries == n and rep.extras["shed"] == 0
+    assert rep.extras["micro_batch"] == 2
+    assert rep.extras["n_waves"] == len(exp_waves)
+    got = np.asarray(sorted(
+        [rep.p50_ms, rep.p90_ms, rep.p99_ms]))
+    want = np.asarray([float(np.percentile(expect_ms, q))
+                       for q in (50, 90, 99)])
+    np.testing.assert_allclose(np.sort(want), got, rtol=1e-9, atol=1e-12)
+
+
+def test_server_streaming_sheds_into_extras(clock):
+    """With a p99 budget and a scripted service model the report carries
+    the shed accounting and the met-SLO flag."""
+    from repro.serve import ServiceModel
+
+    class SlowWave:
+        default_micro_batch = 2
+
+        def submit_wave(self, x, valid=None, micro_batch=None):
+            mb = int(micro_batch or 2)
+            n = np.asarray(x).shape[0]
+            clock.advance(0.050)               # 50ms per wave
+            mask = np.concatenate([np.ones(n, bool), np.zeros(mb - n, bool)])
+            return np.zeros((mb, 2), np.float32), mask
+
+    svc = ServiceModel(works=[("s", 0)], sec_per_cycle=0.050 / 9)
+    rep = server_streaming(SlowWave(), _mk, qps=500.0, n_queries=40,
+                           seed=0, max_wait_ms=2.0, micro_batch=2,
+                           p99_budget_ms=120.0, service_model=svc,
+                           warmup=0)
+    assert rep.extras["shed"] > 0
+    assert rep.extras["served"] + rep.extras["shed"] == 40
+    assert rep.extras["shed_rate"] == pytest.approx(
+        rep.extras["shed"] / 40)
+    assert rep.extras["p99_budget_ms"] == 120.0
+    assert rep.extras["met_slo"] == (rep.p99_ms <= 120.0)
 
 
 def test_stage_ms_breakdown_sums_to_end_to_end(clock, monkeypatch):

@@ -1,0 +1,446 @@
+"""repro.serve: deterministic router/batching/SLO tests plus the golden
+padded-wave bit-exactness contract.
+
+Everything timing-shaped runs under ``ManualClock`` with scripted service
+times, so batching deadlines, latency percentiles, and shed rates are
+exact arithmetic the tests recompute independently (the hand-simulated
+trace below is worked out on paper, not by re-running the router). The
+golden-model section then closes the loop on real executors: partially
+filled waves — the padding the dynamic batcher creates under real
+traffic — must be bit-identical to ``offline`` on all four Table-1
+families.
+"""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.qir import Graph
+from repro.deploy import compile_graph
+from repro.serve import (
+    ManualClock,
+    ReplicaPool,
+    Router,
+    RouterConfig,
+    ServeMetrics,
+    ServiceModel,
+    SLOController,
+    diurnal_trace,
+    mmpp_trace,
+    poisson_trace,
+    replay_trace,
+    slo_operating_point,
+)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+MODELS = ("kws", "ad", "ic", "cnv")
+
+
+def _load(name):
+    graph = Graph.load(os.path.join(GOLDEN_DIR, f"{name}.qir.json"))
+    data = np.load(os.path.join(GOLDEN_DIR, f"{name}.golden.npz"))
+    return graph, data["x"]
+
+
+class ScriptedModel:
+    """submit_wave fake with the executor's padding contract: each wave
+    advances the manual clock by a scripted service time, outputs identify
+    their input row (sum of codes) so results can be traced back."""
+
+    def __init__(self, clock, service_s=0.003, micro_batch=4):
+        self.clock = clock
+        self.service_s = service_s
+        self.default_micro_batch = micro_batch
+        self.calls = []          # (n_valid, micro_batch) per wave
+
+    def submit_wave(self, x, valid=None, micro_batch=None):
+        mb = int(micro_batch or self.default_micro_batch)
+        x = np.asarray(x)
+        n = x.shape[0]
+        assert n <= mb
+        mask = np.ones(n, bool) if valid is None else np.asarray(valid, bool)
+        mask = np.concatenate([mask, np.zeros(mb - n, bool)])
+        self.calls.append((int(mask.sum()), mb))
+        s = self.service_s(len(self.calls)) if callable(self.service_s) \
+            else self.service_s
+        self.clock.advance(s)
+        y = np.zeros((mb, 1), np.float32)
+        y[:n, 0] = x.reshape(n, -1).sum(axis=1)
+        return y, mask
+
+
+# ---------------------------------------------------------------------------
+# traffic
+# ---------------------------------------------------------------------------
+
+def test_poisson_trace_deterministic_and_rate():
+    a = poisson_trace(qps=100.0, n=500, seed=7)
+    b = poisson_trace(qps=100.0, n=500, seed=7)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    assert a.n == 500 and a.arrivals[0] >= 0
+    assert np.all(np.diff(a.arrivals) >= 0)
+    # LLN: realized rate within 20% of offered
+    assert a.offered_qps == pytest.approx(100.0, rel=0.2)
+    c = poisson_trace(qps=100.0, n=500, seed=8)
+    assert not np.array_equal(a.arrivals, c.arrivals)
+
+
+def test_mmpp_trace_is_burstier_than_poisson():
+    """The burstiness signal: inter-arrival coefficient of variation of an
+    MMPP with far-apart rate states exceeds Poisson's CV of ~1."""
+    p = np.diff(poisson_trace(qps=100.0, n=2000, seed=0).arrivals)
+    m = np.diff(mmpp_trace((10.0, 1000.0), dwell_s=0.5, n=2000,
+                           seed=0).arrivals)
+    cv = lambda d: np.std(d) / np.mean(d)
+    assert cv(m) > 1.5 * cv(p)
+
+
+def test_diurnal_trace_ramps_with_the_rate():
+    """Raised-cosine rate: the mid-period half of the cycle (around the
+    peak) must hold the bulk of the arrivals."""
+    period = 4.0
+    t = diurnal_trace(qps_low=5.0, qps_high=200.0, period_s=period,
+                      n=400, seed=1)
+    phase = np.mod(t.arrivals, period) / period
+    near_peak = np.mean((phase > 0.25) & (phase < 0.75))
+    assert near_peak > 0.7
+    np.testing.assert_array_equal(
+        t.arrivals,
+        diurnal_trace(5.0, 200.0, period, 400, seed=1).arrivals)
+
+
+def test_replay_and_scaled_traces():
+    t = replay_trace([5.0, 5.5, 7.0])
+    np.testing.assert_allclose(t.arrivals, [0.0, 0.5, 2.0])
+    double = t.scaled(2.0)
+    np.testing.assert_allclose(double.arrivals, [0.0, 0.25, 1.0])
+    assert double.offered_qps == pytest.approx(2 * t.offered_qps)
+    with pytest.raises(ValueError):
+        t.scaled(0.0)
+    with pytest.raises(ValueError):
+        poisson_trace(qps=0.0, n=4)
+    with pytest.raises(ValueError):
+        mmpp_trace((), dwell_s=1.0, n=4)
+    with pytest.raises(ValueError):
+        diurnal_trace(10.0, 5.0, 1.0, 4)   # high < low
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_sliding_window_prunes_old_events():
+    m = ServeMetrics(window_s=10.0)
+    m.record_admit(0.0)
+    m.record_completion(1.0, 0.005)
+    m.record_wave(1.0, 3, 4)
+    snap = m.snapshot(5.0)
+    assert snap.n_completed == 1 and snap.n_waves == 1
+    # 20s later everything fell out of the window
+    snap = m.snapshot(21.0)
+    assert snap.n_completed == 0 and snap.n_waves == 0
+    assert snap.p99_ms == 0.0 and snap.throughput_qps == 0.0
+
+
+def test_metrics_percentiles_shed_rate_and_occupancy():
+    m = ServeMetrics(window_s=60.0)
+    lats = [0.001 * (i + 1) for i in range(10)]
+    for i, l in enumerate(lats):
+        m.record_admit(float(i))
+        m.record_completion(float(i), l)
+    for _ in range(3):
+        m.record_shed(9.0)
+    m.record_wave(9.0, 4, 4)
+    m.record_wave(9.0, 2, 4)
+    snap = m.snapshot(10.0)
+    expect = np.asarray(lats) * 1e3
+    assert snap.p50_ms == float(np.percentile(expect, 50))
+    assert snap.p99_ms == float(np.percentile(expect, 99))
+    assert snap.shed_rate == pytest.approx(3 / 13)
+    assert snap.occupancy_hist == {4: 1, 2: 1}
+    assert snap.mean_occupancy == pytest.approx(0.75)
+    assert snap.throughput_qps == pytest.approx(10 / 10.0)
+    assert "p99_ms" in snap.row()
+
+
+# ---------------------------------------------------------------------------
+# router batching under a manual clock
+# ---------------------------------------------------------------------------
+
+def test_full_wave_dispatches_inline_partial_waits_for_deadline():
+    clock = ManualClock()
+    model = ScriptedModel(clock, service_s=0.0, micro_batch=4)
+    router = Router({"m": model}, RouterConfig(max_wait_ms=5.0),
+                    clock=clock)
+    x = np.ones((8,), np.int32)
+    for _ in range(3):
+        router.submit("m", x)
+    assert model.calls == []                 # partial wave: no dispatch yet
+    router.step()
+    assert model.calls == []                 # deadline (5ms) not reached
+    clock.advance(0.0049)
+    router.step()
+    assert model.calls == []
+    clock.advance(0.0002)                    # past the 5ms deadline
+    assert router.step() == 3
+    assert model.calls == [(3, 4)]           # padded partial wave
+    req = router.submit("m", x)
+    for _ in range(3):
+        req = router.submit("m", x)
+    assert model.calls[-1] == (4, 4)         # full wave went inline
+    assert req.result is not None and not req.shed
+
+
+def test_batch_deadline_anchors_to_oldest_pending_request():
+    clock = ManualClock()
+    model = ScriptedModel(clock, service_s=0.0, micro_batch=8)
+    router = Router({"m": model}, RouterConfig(max_wait_ms=10.0),
+                    clock=clock)
+    router.submit("m", np.ones((2,), np.int32))
+    clock.advance(0.008)
+    router.submit("m", np.ones((2,), np.int32))   # younger request
+    assert router.next_deadline() == pytest.approx(0.010)
+    clock.advance(0.002)
+    assert router.step() == 2                     # oldest hit its deadline
+    assert model.calls == [(2, 8)]
+
+
+def test_router_exact_p99_vs_hand_simulated_trace():
+    """Replay a 5-request trace whose schedule is worked out by hand:
+
+    mb=2, max_wait=5ms, service=3ms/wave, arrivals [0,1,10,11,30] ms.
+      r0@0ms queues; r1@1ms fills the wave -> dispatch@1ms, done@4ms
+        (lat r0=4ms, r1=3ms)
+      r2@10ms queues; r3@11ms fills -> dispatch@11ms, done@14ms
+        (lat r2=4ms, r3=3ms)
+      r4@30ms queues alone; deadline 35ms -> flush@35ms, done@38ms
+        (lat r4=8ms)
+    """
+    clock = ManualClock()
+    model = ScriptedModel(clock, service_s=0.003, micro_batch=2)
+    router = Router({"m": model}, RouterConfig(max_wait_ms=5.0),
+                    clock=clock)
+    trace = replay_trace(np.asarray([0.0, 1.0, 10.0, 11.0, 30.0]) * 1e-3)
+    reqs = router.run_trace("m", trace, lambda i: np.ones((4,), np.int32))
+    got_ms = [r.latency_s * 1e3 for r in reqs]
+    expect_ms = [4.0, 3.0, 4.0, 3.0, 8.0]
+    np.testing.assert_allclose(got_ms, expect_ms, rtol=1e-9)
+    assert model.calls == [(2, 2), (2, 2), (1, 2)]
+    snap = router.stats()["m"]["metrics"]
+    assert snap.p50_ms == pytest.approx(np.percentile(expect_ms, 50))
+    assert snap.p90_ms == pytest.approx(np.percentile(expect_ms, 90))
+    assert snap.p99_ms == pytest.approx(np.percentile(expect_ms, 99))
+    assert snap.mean_occupancy == pytest.approx((1 + 1 + 0.5) / 3)
+    assert snap.shed_rate == 0.0
+
+
+def test_router_sheds_at_overload_and_keeps_served_under_budget():
+    """2x overload: offered rate twice the wave-service capacity. The SLO
+    controller must shed a substantial fraction and — because admission
+    bounds estimated completion by the budget — every *served* request
+    stays inside it."""
+    clock = ManualClock()
+    mb, service_s = 4, 0.004
+    model = ScriptedModel(clock, service_s=service_s, micro_batch=mb)
+    # scripted service model that matches the fake exactly: one stage whose
+    # cycles scale so wave_service_s(mb) == service_s at every mb
+    svc = ServiceModel(works=[("s", 0)], sec_per_cycle=service_s / 9)
+    assert svc.wave_service_s(mb) == pytest.approx(service_s)
+    budget_ms = 25.0
+    router = Router(
+        {"m": model},
+        RouterConfig(max_wait_ms=2.0, p99_budget_ms=budget_ms),
+        clock=clock, service_models={"m": svc})
+    capacity = mb / service_s                      # 1000 qps
+    trace = poisson_trace(qps=2 * capacity, n=400, seed=3)
+    reqs = router.run_trace("m", trace, lambda i: np.ones((4,), np.int32))
+    served = [r for r in reqs if not r.shed]
+    shed_rate = 1 - len(served) / len(reqs)
+    assert 0.25 < shed_rate < 0.75
+    lat_ms = np.asarray([r.latency_s for r in served]) * 1e3
+    assert float(lat_ms.max()) <= budget_ms + 1e-6
+    snap = router.stats()["m"]["metrics"]
+    assert snap.n_shed + snap.n_admitted == len(reqs)
+    slo = router.stats()["m"]["slo"]
+    assert slo["utilization"] > 1.0                # offered 2x capacity
+    assert slo["occupancy_estimate"] > 0.0
+
+
+def test_router_no_shedding_below_saturation():
+    """At 0.5x capacity with a sane budget nothing should shed. The
+    max-wait must be long enough for waves to fill (deadline-flushing
+    singleton waves would halve the capacity the load is scaled to)."""
+    clock = ManualClock()
+    mb, service_s = 4, 0.004
+    model = ScriptedModel(clock, service_s=service_s, micro_batch=mb)
+    svc = ServiceModel(works=[("s", 0)], sec_per_cycle=service_s / 9)
+    router = Router(
+        {"m": model},
+        RouterConfig(max_wait_ms=10.0, p99_budget_ms=50.0),
+        clock=clock, service_models={"m": svc})
+    trace = poisson_trace(qps=0.5 * mb / service_s, n=200, seed=5)
+    reqs = router.run_trace("m", trace, lambda i: np.ones((4,), np.int32))
+    assert all(not r.shed for r in reqs)
+    assert router.stats()["m"]["metrics"].shed_rate == 0.0
+
+
+def test_router_unknown_model_raises():
+    router = Router({"m": ScriptedModel(ManualClock())})
+    with pytest.raises(KeyError):
+        router.submit("nope", np.zeros((2,), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# replica pool
+# ---------------------------------------------------------------------------
+
+def test_replica_pool_needs_factory_beyond_one_device():
+    with pytest.raises(ValueError, match="factory"):
+        ReplicaPool(ScriptedModel(ManualClock()), devices=[None, None])
+    with pytest.raises(ValueError):
+        ReplicaPool()
+
+
+def test_replica_pool_places_by_least_outstanding_work():
+    clock = ManualClock()
+    pool = ReplicaPool(factory=lambda: ScriptedModel(clock),
+                       devices=[None, None, None])
+    assert pool.n_replicas == 3
+    r0 = pool.place(work_s=5.0)
+    r1 = pool.place(work_s=1.0)
+    r2 = pool.place(work_s=1.0)
+    assert {r0.index, r1.index, r2.index} == {0, 1, 2}
+    # next wave lands on the least-loaded replica (1 or 2, tie -> 1)
+    r = pool.place(work_s=0.5)
+    assert r.index == 1
+    pool.complete(r0, 5.0)
+    assert pool.place(work_s=0.1).index == 0
+    stats = pool.stats()
+    assert [s["replica"] for s in stats] == [0, 1, 2]
+    assert all(s["outstanding_s"] >= 0 for s in stats)
+
+
+def test_router_spreads_waves_across_replicas():
+    clock = ManualClock()
+    mk = lambda: ScriptedModel(clock, service_s=0.001, micro_batch=2)
+    pool = ReplicaPool(factory=mk, devices=[None, None])
+    svc = ServiceModel(works=[("s", 0)], sec_per_cycle=0.001 / 9)
+    router = Router({"m": pool},
+                    RouterConfig(max_wait_ms=1.0, p99_budget_ms=100.0),
+                    clock=clock, service_models={"m": svc})
+    for _ in range(8):
+        router.submit("m", np.ones((2,), np.int32))
+    dispatched = [r.n_dispatched for r in pool.replicas]
+    assert sum(dispatched) == 4 and min(dispatched) >= 1
+
+
+# ---------------------------------------------------------------------------
+# SLO controller / service model
+# ---------------------------------------------------------------------------
+
+def test_service_model_from_compiled_calibrates_cycles():
+    graph, x = _load("kws")
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    svc = ServiceModel.from_compiled(cm, probe_batch=4)
+    assert svc.sec_per_cycle > 0
+    assert svc.calibration["probe_batch"] == 4
+    assert svc.calibration["modeled_cycles"] == svc.wave_cycles(4)
+    # cycles grow with the wave, capacity favors bigger waves
+    assert svc.wave_cycles(32) > svc.wave_cycles(1)
+    assert svc.saturation_qps(32) > svc.saturation_qps(1)
+
+
+def test_slo_controller_admission_and_littles_law():
+    svc = ServiceModel(works=[("s", 0)], sec_per_cycle=1e-3)  # 9ms / wave
+    ctl = SLOController(p99_budget_ms=30.0, service=svc, window_s=10.0)
+    # (backlog+1)*9ms + wait: 2 waves ahead + 2ms wait = 29ms fits ...
+    assert ctl.admit(0.0, backlog_waves=2, micro_batch=4, max_wait_s=0.002)
+    # ... 3 waves ahead = 38ms does not
+    assert not ctl.admit(0.0, backlog_waves=3, micro_batch=4,
+                         max_wait_s=0.002)
+    # Little's law: 100 qps at W = 2ms wait + 9ms service -> L = 1.1
+    for i in range(101):
+        ctl.observe_arrival(i / 100.0)
+    assert ctl.arrival_qps(1.0) == pytest.approx(100.0, rel=0.02)
+    est = ctl.occupancy_estimate(1.0, micro_batch=4, max_wait_s=0.002)
+    assert est == pytest.approx(100.0 * 0.011, rel=0.05)
+    # measured service drift moves the EWMA correction
+    before = ctl.wave_service_s(4)
+    ctl.observe_service(4, measured_s=2 * before)
+    assert ctl.wave_service_s(4) > before
+
+
+def test_slo_operating_point_largest_wave_under_budget():
+    svc = ServiceModel(works=[("s", 8192)], sec_per_cycle=1e-3)
+    # service(mb) = (8 + mb) ms -> budget 20ms admits up to mb=8
+    point = slo_operating_point(svc, p99_budget_ms=20.0,
+                                candidates=(1, 2, 4, 8, 16, 32))
+    assert point["micro_batch"] == 8 and point["fits_budget"]
+    # throughput grows with the wave until the budget wall
+    sats = [c["saturation_qps"] for c in point["candidates"]]
+    assert sats == sorted(sats)
+    # an impossible budget falls back to the smallest wave, flagged
+    tiny = slo_operating_point(svc, p99_budget_ms=1.0,
+                               candidates=(4, 8))
+    assert tiny["micro_batch"] == 4 and not tiny["fits_budget"]
+
+
+# ---------------------------------------------------------------------------
+# padded-wave bit-exactness on the golden models (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+def _assert_rows_equal(got, want, label):
+    got, want = np.asarray(got), np.asarray(want)
+    if np.issubdtype(want.dtype, np.integer):
+        np.testing.assert_array_equal(got, want, err_msg=label)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
+                                   err_msg=label)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_submit_wave_padded_partial_is_bit_exact(name):
+    graph, x = _load(name)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    x = jnp.asarray(x)
+    y_off = np.asarray(cm.offline(x))
+    n = min(3, x.shape[0])                   # partial: 3 rows in a wave of 8
+    y, mask = cm.submit_wave(x[:n], micro_batch=8)
+    assert mask.tolist() == [True] * n + [False] * (8 - n)
+    _assert_rows_equal(np.asarray(y)[mask], y_off[:n], f"{name} padded wave")
+    # holes in the valid mask stay inert too
+    valid = np.asarray([True, False, True])
+    y2, m2 = cm.submit_wave(x[:3], valid=valid, micro_batch=4)
+    _assert_rows_equal(np.asarray(y2)[m2], y_off[[0, 2]],
+                       f"{name} masked wave")
+    with pytest.raises(ValueError):
+        cm.submit_wave(x[:3], micro_batch=2)     # 3 rows > wave of 2
+    with pytest.raises(ValueError):
+        cm.submit_wave(x[:3], valid=np.ones(2, bool), micro_batch=4)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_router_serves_golden_models_bit_exact(name):
+    """The acceptance path: requests through the dynamic batcher — full
+    waves AND a deadline-flushed padded partial wave — match offline."""
+    graph, x = _load(name)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    y_off = np.asarray(cm.offline(jnp.asarray(x)))
+    clock = ManualClock()
+    router = Router({name: cm},
+                    RouterConfig(max_wait_ms=1.0, micro_batch=3),
+                    clock=clock)
+    reqs = [router.submit(name, np.asarray(x[i]))
+            for i in range(x.shape[0])]       # goldens have 4 rows: 3 + 1
+    clock.advance(0.002)
+    router.step()                             # deadline-flush the partial
+    assert all(r.result is not None for r in reqs)
+    for i, r in enumerate(reqs):
+        _assert_rows_equal(r.result, y_off[i], f"{name} req {i}")
+    snap = router.stats()[name]["metrics"]
+    assert snap.n_waves == 2 and snap.occupancy_hist.get(1) == 1
