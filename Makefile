@@ -1,4 +1,5 @@
-.PHONY: test test-fast bench bench-table6 bench-scenarios bench-serve example
+.PHONY: test test-fast bench bench-table6 bench-scenarios bench-serve \
+	bench-obs trace-demo lint-clock example
 
 test:            ## full tier-1 suite
 	./scripts/test.sh
@@ -17,6 +18,15 @@ bench-scenarios: ## scenario sweep, standalone (REPRO_FAST=1 for a quick pass)
 
 bench-serve:     ## serving throughput-at-SLO curves over the dynamic batcher
 	PYTHONPATH=src:. REPRO_FAST=$(REPRO_FAST) python benchmarks/serve_bench.py
+
+bench-obs:       ## NullTracer overhead assert + FIFO prediction-error table
+	PYTHONPATH=src:. REPRO_FAST=$(REPRO_FAST) python benchmarks/obs_bench.py
+
+trace-demo:      ## one traced server run -> Perfetto timeline artifact
+	PYTHONPATH=src:. python benchmarks/obs_bench.py --demo
+
+lint-clock:      ## no raw stdlib clock reads outside repro.obs.timer
+	python scripts/check_no_raw_clock.py
 
 example:         ## the end-to-end codesign + compiled-deployment example
 	PYTHONPATH=src python examples/mlperf_tiny_codesign.py

@@ -5,9 +5,11 @@ across PRs instead of living only in stdout."""
 
 from __future__ import annotations
 
+import datetime
 import json
 import os
 import platform
+import subprocess
 import time
 from typing import Any, Callable, Dict, List
 
@@ -46,11 +48,44 @@ def bench_dir() -> str:
     return os.environ.get("REPRO_BENCH_DIR", ".")
 
 
+def git_sha() -> str:
+    """Short sha of HEAD, or "" outside a git checkout (artifacts must
+    still be writable from an exported tree)."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+    except Exception:
+        return ""
+
+
+def provenance() -> Dict[str, str]:
+    """Who/what/when produced an artifact: git sha, platform string, JAX
+    version, device kind, UTC timestamp. Attached to every BENCH_*.json
+    so a number can always be traced back to the code and machine that
+    made it."""
+    try:
+        device_kind = jax.devices()[0].device_kind
+    except Exception:
+        device_kind = "unknown"
+    return {
+        "git_sha": git_sha(),
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "device_kind": device_kind,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+
+
 def emit_json(name: str, payload: Dict[str, Any]) -> str:
     """Write one machine-readable benchmark artifact.
 
-    ``payload`` gets a schema version and the platform fingerprint attached
-    so artifacts from different machines/PRs are comparable. Returns the
+    ``payload`` gets a schema version, the platform fingerprint, and the
+    run's provenance stamp (``provenance()``) attached so artifacts from
+    different machines/PRs are comparable AND traceable. Returns the
     path written."""
     os.makedirs(bench_dir(), exist_ok=True)
     path = os.path.join(bench_dir(), name)
@@ -59,6 +94,7 @@ def emit_json(name: str, payload: Dict[str, Any]) -> str:
         "backend": jax.default_backend(),
         "machine": platform.machine(),
         "python": platform.python_version(),
+        "provenance": provenance(),
         **payload,
     }
     with open(path, "w") as f:

@@ -20,6 +20,7 @@ from benchmarks import (
     fig3_asha_scan,
     fig4_quant_scan,
     kernel_bench,
+    obs_bench,
     serve_bench,
     table1_models,
     table2_fifo,
@@ -41,6 +42,7 @@ SECTIONS = {
     "fig4": fig4_quant_scan.run,
     "kernels": kernel_bench.run,
     "serve": serve_bench.run,
+    "obs": obs_bench.run,
 }
 
 

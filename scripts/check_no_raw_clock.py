@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Lint: no raw clock reads outside the two sanctioned files.
+
+Every wall-clock read in ``src/repro`` must go through the injectable
+obs timer (``repro.obs.timer``) or the serve clock (``repro.serve.clock``)
+— that is what makes the whole stack a deterministic discrete-event
+simulation under a fake clock, and what keeps exported traces
+byte-reproducible. A raw ``time.time()`` / ``time.perf_counter()`` /
+``time.monotonic()`` / ``time.sleep()`` anywhere else silently escapes the
+injection point, so this script (wired into CI) fails the build on any
+new one.
+
+Usage: python scripts/check_no_raw_clock.py [root]
+Exits 0 when clean, 1 with a file:line listing otherwise.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+#: The only files allowed to touch the stdlib clock directly.
+ALLOWLIST = {
+    os.path.join("src", "repro", "obs", "timer.py"),
+    os.path.join("src", "repro", "serve", "clock.py"),
+}
+
+#: Raw clock reads we forbid. ``import time`` alone is fine (dead imports
+#: are a different lint's job); *calling* the stdlib clock is not.
+PATTERN = re.compile(
+    r"\btime\.(time|perf_counter|perf_counter_ns|monotonic|monotonic_ns"
+    r"|process_time|sleep)\s*\(")
+
+#: Lines where the match is not a stdlib clock call.
+EXEMPT_LINE = re.compile(r"^\s*#|\"\"\"|'''")
+
+
+def scan(root: str) -> list[tuple[str, int, str]]:
+    hits = []
+    src = os.path.join(root, "src", "repro")
+    for dirpath, _, files in os.walk(src):
+        for fname in sorted(files):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root)
+            if rel in ALLOWLIST:
+                continue
+            with open(path, encoding="utf-8") as f:
+                for i, line in enumerate(f, 1):
+                    if PATTERN.search(line) and not EXEMPT_LINE.match(line):
+                        hits.append((rel, i, line.rstrip()))
+    return hits
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    hits = scan(root)
+    if hits:
+        print("raw clock reads outside repro.obs.timer / repro.serve.clock "
+              "(route them through the injectable timer):")
+        for rel, i, line in hits:
+            print(f"  {rel}:{i}: {line}")
+        return 1
+    print("check_no_raw_clock: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

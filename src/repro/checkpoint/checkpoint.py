@@ -27,11 +27,12 @@ import os
 import shutil
 import tempfile
 import threading
-import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.obs import timer as obs_timer
 
 
 def _key_str(p) -> str:
@@ -71,7 +72,7 @@ def save(directory: str, step: int, tree, extra_meta: Optional[dict] = None):
             "keys": sorted(flat.keys()),
             "shapes": {k: list(v.shape) for k, v in flat.items()},
             "dtypes": {k: str(v.dtype) for k, v in flat.items()},
-            "time": time.time(),
+            "time": obs_timer.walltime(),
         }
         if extra_meta:
             manifest["meta"] = extra_meta

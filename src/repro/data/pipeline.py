@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax

@@ -36,7 +36,6 @@ import dataclasses
 import hashlib
 import json
 import os
-import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -44,6 +43,8 @@ import jax.numpy as jnp
 
 from repro.core.bops import conv_input_band_bytes, schedule_cost
 from repro.deploy.lower import FusedConvThresholdStage, FusedThresholdStage
+from repro.obs import timer as obs_timer
+from repro.obs.tracer import NULL_TRACER
 
 CONFIG_VERSION = 2   # v2: + dense block_m/block_n (older caches re-search)
 
@@ -341,10 +342,10 @@ def probe_streaming(cm, x, micro_batch: int, iters: int = 3,
     jax.block_until_ready(y)       # compile + warm
     times = []
     for _ in range(max(iters, 1)):
-        t0 = time.perf_counter()
+        t0 = obs_timer.now()
         y, _ = run(x, micro_batch=micro_batch)
         jax.block_until_ready(y)
-        times.append(time.perf_counter() - t0)
+        times.append(obs_timer.now() - t0)
     times.sort()
     return times[len(times) // 2]
 
@@ -355,14 +356,21 @@ def autotune_model(cm, batch: int = 64,
                    probe: Optional[Callable] = None,
                    sample: Optional[jnp.ndarray] = None,
                    directory: Optional[str] = None,
-                   force: Optional[bool] = None) -> TunedConfig:
+                   force: Optional[bool] = None,
+                   tracer=None) -> TunedConfig:
     """Search (or load from cache) the TunedConfig for one compiled model.
 
     ``probe(cm, x, micro_batch) -> seconds`` overrides the wall-clock
     refinement — with a deterministic probe the whole search is
     deterministic (the model half always is). ``batch`` is the reference
     Offline pool the FIFO simulation prices.
+
+    Each measured probe lands as a ``probe`` span (cat ``autotune``) on
+    the tracer — ``tracer=`` or, by default, the model's own — carrying
+    the candidate's modeled-vs-probed numbers, so the search's audit trail
+    is visible on the same timeline as the serving it tunes.
     """
+    tr = tracer if tracer is not None else getattr(cm, "tracer", NULL_TRACER)
     key = schedule_key(cm)
     if not (autotune_force() if force is None else force):
         cached = load_config(key, directory)
@@ -404,12 +412,23 @@ def autotune_model(cm, batch: int = 64,
         probe_fn = probe
     for cand in top:
         mb = cand["micro_batch"]
+        t0 = obs_timer.now() if tr.enabled else 0.0
         t = float(probe_fn(cm, x, mb))
         probe_ms[str(mb)] = t * 1e3
         cand["probe_ms"] = t * 1e3
+        if tr.enabled:
+            tr.add_span("probe", t0, obs_timer.now(), cat="autotune",
+                        args={"key": key, "micro_batch": mb,
+                              "n_micro": cand["n_micro"],
+                              "modeled_cycles": cand["modeled_cycles"],
+                              "probe_ms": t * 1e3})
 
     winner = min(top, key=lambda d: (d.get("probe_ms", float("inf")),
                                      d["modeled_cycles"]))
+    if tr.enabled:
+        tr.instant("autotune_winner", cat="autotune", key=key,
+                   micro_batch=int(winner["micro_batch"]),
+                   modeled_cycles=int(winner["modeled_cycles"]))
 
     # -- dense matmul blocks: pure model, at the winning wave size -------
     # (the tuned blocks govern the kernel on streaming/serving waves of

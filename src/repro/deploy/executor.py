@@ -45,6 +45,8 @@ import numpy as np
 
 from repro.core.dataflow import micro_batch_stage, optimize_fifo_depths
 from repro.core.qir import Graph
+from repro.obs import timer as obs_timer
+from repro.obs.tracer import NULL_TRACER
 from repro.deploy.lower import (
     FlattenStage,
     FloatHeadStage,
@@ -108,13 +110,22 @@ class CompiledTinyModel:
 
     def __init__(self, schedule: StageSchedule, graph: Optional[Graph] = None,
                  use_pallas: Optional[bool] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 tracer=None):
         self.schedule = schedule
         self.graph = graph
         self.use_pallas = _on_tpu() if use_pallas is None else use_pallas
         self.interpret = interpret
         self.tuned = None          # deploy.autotune.TunedConfig, if applied
+        #: obs.Tracer sink for segment/stage spans and FIFO occupancy
+        #: counters; NULL_TRACER keeps every instrumentation site a no-op
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._rebuild()
+
+    def set_tracer(self, tracer) -> "CompiledTinyModel":
+        """Install (or clear, with ``None``) the obs tracer; returns self."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        return self
 
     def _rebuild(self):
         """(Re)create every compiled entry point from the current schedule —
@@ -208,9 +219,14 @@ class CompiledTinyModel:
         breakdown (and the autotuner's measured refinement it seeds) is
         stable against scheduler noise. Runs the per-stage programs in
         schedule order (each stage's input is the previous stage's real
-        output) so conv-vs-dense costs are visible in scenario reports."""
-        import time
+        output) so conv-vs-dense costs are visible in scenario reports.
 
+        Every timed sample is also recorded as a ``stage`` span on the
+        model's tracer; the returned medians are computed from the SAME
+        clock readings the spans carry, so
+        ``obs.report.stage_medians_ms`` reproduces this breakdown from the
+        trace exactly (cross-checked in tests)."""
+        tr = self.tracer
         out = []
         h = jnp.asarray(x)
         for s, fn in zip(self.schedule.stages, self._stage_fns):
@@ -218,10 +234,15 @@ class CompiledTinyModel:
             jax.block_until_ready(y)      # compile
             jax.block_until_ready(fn(h))  # discarded warm iteration
             times = []
-            for _ in range(max(iters, 1)):
-                t0 = time.perf_counter()
+            for it in range(max(iters, 1)):
+                t0 = obs_timer.now()
                 jax.block_until_ready(fn(h))
-                times.append(time.perf_counter() - t0)
+                t1 = obs_timer.now()
+                if tr.enabled:
+                    tr.add_span("stage", t0, t1, cat="probe",
+                                args={"stage": s.name,
+                                      "kind": type(s).__name__, "iter": it})
+                times.append(t1 - t0)
             times.sort()
             out.append({"stage": s.name, "kind": type(s).__name__,
                         "ms": times[len(times) // 2] * 1e3})
@@ -308,20 +329,31 @@ class CompiledTinyModel:
         feed_i = 0
         done: List[Optional[jnp.ndarray]] = [None] * n_micro
 
+        tr = self.tracer
         while feed_i < n_micro or any(len(q) > 0 for q in queues[:-1]):
             # admit into the input queue while its FIFO has room
             while feed_i < n_micro and len(queues[0]) < depths[0]:
                 queues[0].append(feed[feed_i])
                 max_occ[0] = max(max_occ[0], len(queues[0]))
                 feed_i += 1
+            if tr.enabled:
+                tr.counter("fifo0", len(queues[0]), cat="fifo", tid=1)
             # fire stages downstream-first so space frees upstream
             for si in reversed(range(n_stages)):
                 out_cap = depths[si + 1] if si + 1 < n_stages else n_micro + 1
                 if queues[si] and len(queues[si + 1]) < out_cap:
                     idx, h = queues[si].popleft()
+                    t0 = obs_timer.now() if tr.enabled else 0.0
                     h = self._stage_fns[si](h)
                     queues[si + 1].append((idx, h))
                     max_occ[si + 1] = max(max_occ[si + 1], len(queues[si + 1]))
+                    if tr.enabled:
+                        tr.add_span("fire", t0, obs_timer.now(), cat="fifo",
+                                    tid=si + 1,
+                                    args={"stage": self.schedule
+                                          .stages[si].name, "micro": idx})
+                        tr.counter(f"fifo{si + 1}", len(queues[si + 1]),
+                                   cat="fifo", tid=si + 2)
             while queues[-1]:
                 idx, y = queues[-1].popleft()
                 done[idx] = y
@@ -379,15 +411,34 @@ class CompiledTinyModel:
         buf = np.zeros((mb,) + xb.shape[1:], xb.dtype)
         buf[:n][mask[:n]] = xb[mask[:n]]
         wave = jnp.asarray(buf[None])
+        wave = self._run_segments(wave, 1, mode="submit_wave")
+        return wave[0], mask
+
+    def _run_segments(self, wave, n_micro: int, mode: str):
+        """Push a stacked wave through every segment program, recording one
+        ``segment`` span per segment when a tracer is installed. Spans
+        measure host-side dispatch (tid = segment index + 1); on CPU, where
+        XLA dispatch is effectively synchronous, that is the execution time
+        — on accelerators the wave-level span (router) is the honest
+        end-to-end number."""
+        tr = self.tracer
         for k, seg in enumerate(self.segments):
+            t0 = obs_timer.now() if tr.enabled else 0.0
             if seg.compiled:
                 wave = self._segment_fn(k)(wave)
             else:
-                h = wave[0]
+                # host boundary: the fallback interpreter, per micro-batch
+                outs = [wave[i] for i in range(n_micro)]
                 for si in range(seg.start, seg.stop):
-                    h = self._stage_fns[si](h)
-                wave = h[None]
-        return wave[0], mask
+                    outs = [self._stage_fns[si](h) for h in outs]
+                wave = jnp.stack(outs)
+            if tr.enabled:
+                tr.add_span("segment", t0, obs_timer.now(), cat="executor",
+                            tid=k + 1,
+                            args={"segment": k, "mode": mode,
+                                  "compiled": bool(seg.compiled),
+                                  "stages": [seg.start, seg.stop]})
+        return wave
 
     # -- streaming, compiled (the deployment hot path) ---------------------
     def _segment_fn(self, k: int) -> Callable:
@@ -429,15 +480,7 @@ class CompiledTinyModel:
         x_int, n, n_micro = self._pad_micro(x_int, mb)
         depths, sim_cycles = self.plan_streaming(n_micro, micro_batch=mb)
         wave = x_int.reshape((n_micro, mb) + x_int.shape[1:])
-        for k, seg in enumerate(self.segments):
-            if seg.compiled:
-                wave = self._segment_fn(k)(wave)
-            else:
-                # host boundary: the fallback interpreter, per micro-batch
-                outs = [wave[i] for i in range(n_micro)]
-                for si in range(seg.start, seg.stop):
-                    outs = [self._stage_fns[si](h) for h in outs]
-                wave = jnp.stack(outs)
+        wave = self._run_segments(wave, n_micro, mode="streaming_compiled")
         y = wave.reshape((n_micro * mb,) + wave.shape[2:])[:n]
         # no host queues to observe: report the FIFO model's occupancy
         # (depth = max occupancy + 1 by construction of the optimizer)
@@ -454,7 +497,7 @@ def compile_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
                   interpret: Optional[bool] = None,
                   conv_lowering: Optional[str] = None,
                   autotune: bool = False,
-                  tuned=None) -> CompiledTinyModel:
+                  tuned=None, tracer=None) -> CompiledTinyModel:
     """The one-call deployment entry point: QIR json graph -> executor.
 
     ``conv_lowering`` picks the conv stage algorithm ("direct" fused kernel
@@ -469,7 +512,7 @@ def compile_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
     schedule = lower_graph(graph, in_scale=in_scale,
                            conv_lowering=conv_lowering)
     cm = CompiledTinyModel(schedule, graph=graph, use_pallas=use_pallas,
-                           interpret=interpret)
+                           interpret=interpret, tracer=tracer)
     if tuned is not None:
         cm.apply_tuned(tuned)
     elif autotune:

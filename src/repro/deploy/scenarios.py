@@ -21,13 +21,14 @@ by the model's BOPs/weight bits (``core.bops``), next to a measured proxy
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from repro.core.codesign import CHIP_WATTS, deploy_report
+from repro.obs import timer as obs_timer
+from repro.obs.tracer import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -100,23 +101,27 @@ def _stage_breakdown(compiled, x) -> Optional[List[Dict]]:
 def single_stream(infer: Callable, make_query: Callable[[int], np.ndarray],
                   n_queries: int = 64, warmup: int = 3,
                   model_cost=None, bits: int = 8,
-                  compiled=None) -> ScenarioReport:
+                  compiled=None, tracer=None) -> ScenarioReport:
     """Batch-1 queries back to back; MLPerf scores p90 latency.
 
     ``make_query(i)`` returns ONE unbatched sample; the scenario adds the
     batch-1 axis (every scenario batches for itself). Pass the compiled
     executor as ``compiled`` to attach a per-stage latency breakdown.
     """
+    tr = tracer if tracer is not None else NULL_TRACER
     for w in range(warmup):
         jax.block_until_ready(infer(np.asarray(make_query(w))[None]))
     lats = []
-    t_start = time.perf_counter()
+    t_start = obs_timer.now()
     for i in range(n_queries):
         x = np.asarray(make_query(i))[None]
-        t0 = time.perf_counter()
+        t0 = obs_timer.now()
         jax.block_until_ready(infer(x))
-        lats.append(time.perf_counter() - t0)
-    span = time.perf_counter() - t_start
+        lats.append(obs_timer.now() - t0)
+    span = obs_timer.now() - t_start
+    if tr.enabled:
+        tr.add_span("scenario", t_start, t_start + span, cat="scenario",
+                    args={"scenario": "SingleStream", "n": n_queries})
     stage_ms = (None if compiled is None
                 else _stage_breakdown(compiled, np.asarray(make_query(0))[None]))
     return _finish("SingleStream", lats, n_queries, span, model_cost, bits,
@@ -125,42 +130,55 @@ def single_stream(infer: Callable, make_query: Callable[[int], np.ndarray],
 
 def multi_stream(infer: Callable, make_query: Callable[[int], np.ndarray],
                  n_streams: int = 8, n_queries: int = 64, warmup: int = 2,
-                 model_cost=None, bits: int = 8) -> ScenarioReport:
+                 model_cost=None, bits: int = 8,
+                 tracer=None) -> ScenarioReport:
     """N concurrent streams per step: one batched inference serves all
     streams; a step's latency applies to every query in it."""
+    tr = tracer if tracer is not None else NULL_TRACER
     steps = max(1, n_queries // n_streams)
     batch0 = np.stack([make_query(s) for s in range(n_streams)])
     for _ in range(warmup):
         jax.block_until_ready(infer(batch0))
     lats = []
-    t_start = time.perf_counter()
+    t_start = obs_timer.now()
     for i in range(steps):
         xb = np.stack([make_query(i * n_streams + s) for s in range(n_streams)])
-        t0 = time.perf_counter()
+        t0 = obs_timer.now()
         jax.block_until_ready(infer(xb))
-        lats.extend([time.perf_counter() - t0] * n_streams)
-    span = time.perf_counter() - t_start
+        lats.extend([obs_timer.now() - t0] * n_streams)
+    span = obs_timer.now() - t_start
+    if tr.enabled:
+        tr.add_span("scenario", t_start, t_start + span, cat="scenario",
+                    args={"scenario": "MultiStream",
+                          "n": steps * n_streams, "streams": n_streams})
     return _finish("MultiStream", lats, steps * n_streams, span,
                    model_cost, bits, streams=n_streams)
 
 
 def offline(infer: Callable, make_query: Callable[[int], np.ndarray],
             n_samples: int = 256, warmup: int = 2, iters: int = 3,
-            model_cost=None, bits: int = 8, compiled=None) -> ScenarioReport:
+            model_cost=None, bits: int = 8, compiled=None,
+            tracer=None) -> ScenarioReport:
     """Whole pool in one batch; the throughput scenario.
 
     Times ``iters`` post-warmup runs and reports the *median* span — a
     single run's wall clock flaps on CPU noise, which is what used to flip
     marginal speedup flags (``beats_im2col``) between benchmark runs.
     """
+    tr = tracer if tracer is not None else NULL_TRACER
     xb = np.stack([make_query(i) for i in range(n_samples)])
     for _ in range(warmup):
         jax.block_until_ready(infer(xb))
     spans = []
-    for _ in range(max(iters, 1)):
-        t0 = time.perf_counter()
+    for it in range(max(iters, 1)):
+        t0 = obs_timer.now()
         jax.block_until_ready(infer(xb))
-        spans.append(time.perf_counter() - t0)
+        t1 = obs_timer.now()
+        if tr.enabled:
+            tr.add_span("scenario", t0, t1, cat="scenario",
+                        args={"scenario": "Offline", "n": n_samples,
+                              "iter": it})
+        spans.append(t1 - t0)
     spans.sort()
     span = spans[len(spans) // 2]
     per_query = span / n_samples
@@ -173,7 +191,8 @@ def offline(infer: Callable, make_query: Callable[[int], np.ndarray],
 def streaming_pipeline(compiled, make_query: Callable[[int], np.ndarray],
                        n_samples: int = 256, micro_batch: Optional[int] = None,
                        warmup: int = 1, iters: int = 3,
-                       model_cost=None, bits: int = 8) -> ScenarioReport:
+                       model_cost=None, bits: int = 8,
+                       tracer=None) -> ScenarioReport:
     """The Offline pool through the compiled streaming pipeline.
 
     Runs ``compiled.streaming_compiled`` (one jit program per segment wave)
@@ -182,17 +201,23 @@ def streaming_pipeline(compiled, make_query: Callable[[int], np.ndarray],
     Reports the median span of ``iters`` runs like ``offline``, plus the
     FIFO plan that scheduled it.
     """
+    tr = tracer if tracer is not None else NULL_TRACER
     xb = np.stack([make_query(i) for i in range(n_samples)])
     for _ in range(max(warmup, 1)):
         y, _ = compiled.streaming_compiled(xb, micro_batch=micro_batch)
         jax.block_until_ready(y)
     spans = []
     stats = None
-    for _ in range(max(iters, 1)):
-        t0 = time.perf_counter()
+    for it in range(max(iters, 1)):
+        t0 = obs_timer.now()
         y, stats = compiled.streaming_compiled(xb, micro_batch=micro_batch)
         jax.block_until_ready(y)
-        spans.append(time.perf_counter() - t0)
+        t1 = obs_timer.now()
+        if tr.enabled:
+            tr.add_span("scenario", t0, t1, cat="scenario",
+                        args={"scenario": "StreamingOffline",
+                              "n": n_samples, "iter": it})
+        spans.append(t1 - t0)
     spans.sort()
     span = spans[len(spans) // 2]
     return _finish("StreamingOffline", [span / n_samples] * n_samples,
@@ -204,8 +229,8 @@ def streaming_pipeline(compiled, make_query: Callable[[int], np.ndarray],
 
 def server_poisson(infer: Callable, make_query: Callable[[int], np.ndarray],
                    qps: float = 200.0, n_queries: int = 128, seed: int = 0,
-                   warmup: int = 3, model_cost=None, bits: int = 8
-                   ) -> ScenarioReport:
+                   warmup: int = 3, model_cost=None, bits: int = 8,
+                   tracer=None) -> ScenarioReport:
     """Poisson arrivals into a single-worker queue.
 
     Arrival times are drawn up front; the worker serves FIFO, so reported
@@ -220,6 +245,7 @@ def server_poisson(infer: Callable, make_query: Callable[[int], np.ndarray],
     host-side array construction or compile ever lands inside a measured
     latency.
     """
+    tr = tracer if tracer is not None else NULL_TRACER
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / qps, n_queries))
     queries = [np.asarray(make_query(i))[None] for i in range(n_queries)]
@@ -227,17 +253,21 @@ def server_poisson(infer: Callable, make_query: Callable[[int], np.ndarray],
         jax.block_until_ready(infer(queries[w % n_queries]))
     jax.block_until_ready(infer(queries[0]))   # discarded warm iteration
     lats = []
-    t_start = time.perf_counter()
+    t_start = obs_timer.now()
     free_at = 0.0
     for i in range(n_queries):
-        now = time.perf_counter() - t_start
+        now = obs_timer.now() - t_start
         if now < arrivals[i]:
-            time.sleep(arrivals[i] - now)
+            obs_timer.sleep(arrivals[i] - now)
         jax.block_until_ready(infer(queries[i]))
-        done = time.perf_counter() - t_start
+        done = obs_timer.now() - t_start
         lats.append(done - arrivals[i])
         free_at = done
     span = free_at - arrivals[0]
+    if tr.enabled:
+        tr.add_span("scenario", t_start, t_start + free_at, cat="scenario",
+                    args={"scenario": "Server", "n": n_queries,
+                          "offered_qps": qps})
     return _finish("Server", lats, n_queries, span, model_cost, bits,
                    offered_qps=qps)
 
@@ -248,7 +278,8 @@ def server_streaming(compiled, make_query: Callable[[int], np.ndarray],
                      p99_budget_ms: Optional[float] = None,
                      micro_batch: Optional[int] = None,
                      service_model=None, warmup: int = 1,
-                     model_cost=None, bits: int = 8) -> ScenarioReport:
+                     model_cost=None, bits: int = 8,
+                     tracer=None) -> ScenarioReport:
     """MLPerf Server mode over the dynamic-batching serve router.
 
     Where ``server_poisson`` serves each arrival alone (batch 1, one
@@ -270,15 +301,16 @@ def server_streaming(compiled, make_query: Callable[[int], np.ndarray],
     from repro.serve import Router, RouterConfig, poisson_trace
 
     class _Clock:
-        """Adapter reading through this module's ``time`` binding so the
-        deterministic-clock tests control the router too."""
+        """Adapter reading through the injectable obs timer
+        (``repro.obs.timer``) so the deterministic-clock tests control
+        the router too."""
 
         def now(self) -> float:
-            return time.perf_counter()
+            return obs_timer.now()
 
         def sleep(self, seconds: float) -> None:
             if seconds > 0:
-                time.sleep(seconds)
+                obs_timer.sleep(seconds)
 
     queries = [np.asarray(make_query(i)) for i in range(n_queries)]
     submit = getattr(compiled, "submit_wave", None)
@@ -292,7 +324,8 @@ def server_streaming(compiled, make_query: Callable[[int], np.ndarray],
                        p99_budget_ms=p99_budget_ms)
     router = Router({"m": compiled}, cfg, clock=_Clock(),
                     service_models=(None if service_model is None
-                                    else {"m": service_model}))
+                                    else {"m": service_model}),
+                    tracer=tracer)
     trace = poisson_trace(qps=qps, n=n_queries, seed=seed)
     reqs = router.run_trace("m", trace, lambda i: queries[i])
     served = [r for r in reqs if not r.shed]
@@ -327,8 +360,8 @@ def server_streaming(compiled, make_query: Callable[[int], np.ndarray],
 def run_all_scenarios(infer: Callable, make_query: Callable[[int], np.ndarray],
                       n_queries: int = 64, n_streams: int = 8,
                       offline_samples: int = 256, server_qps: float = 200.0,
-                      model_cost=None, bits: int = 8, compiled=None
-                      ) -> List[ScenarioReport]:
+                      model_cost=None, bits: int = 8, compiled=None,
+                      tracer=None) -> List[ScenarioReport]:
     """The full MLPerf-Tiny sweep for one deployed model.
 
     When ``compiled`` exposes a streaming executor
@@ -340,20 +373,24 @@ def run_all_scenarios(infer: Callable, make_query: Callable[[int], np.ndarray],
     """
     reports = [
         single_stream(infer, make_query, n_queries=n_queries,
-                      model_cost=model_cost, bits=bits, compiled=compiled),
+                      model_cost=model_cost, bits=bits, compiled=compiled,
+                      tracer=tracer),
         multi_stream(infer, make_query, n_streams=n_streams,
-                     n_queries=n_queries, model_cost=model_cost, bits=bits),
+                     n_queries=n_queries, model_cost=model_cost, bits=bits,
+                     tracer=tracer),
         offline(infer, make_query, n_samples=offline_samples,
-                model_cost=model_cost, bits=bits, compiled=compiled),
+                model_cost=model_cost, bits=bits, compiled=compiled,
+                tracer=tracer),
         server_poisson(infer, make_query, qps=server_qps,
-                       n_queries=n_queries, model_cost=model_cost, bits=bits),
+                       n_queries=n_queries, model_cost=model_cost, bits=bits,
+                       tracer=tracer),
     ]
     if compiled is not None and hasattr(compiled, "streaming_compiled"):
         reports.append(streaming_pipeline(
             compiled, make_query, n_samples=offline_samples,
-            model_cost=model_cost, bits=bits))
+            model_cost=model_cost, bits=bits, tracer=tracer))
     if compiled is not None and hasattr(compiled, "submit_wave"):
         reports.append(server_streaming(
             compiled, make_query, qps=server_qps, n_queries=n_queries,
-            model_cost=model_cost, bits=bits))
+            model_cost=model_cost, bits=bits, tracer=tracer))
     return reports

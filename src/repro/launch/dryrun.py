@@ -26,13 +26,14 @@ Usage:
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import timer as obs_timer
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
@@ -227,7 +228,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         _write(result, out_dir)
         return result
 
-    t0 = time.time()
+    t0 = obs_timer.now()
     mesh = make_production_mesh(multi_pod=multi_pod)
     baxes = batch_logical_axes(shape.global_batch, mesh)
     rules = arch_rules(cfg, mesh, baxes)
@@ -296,9 +297,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 state_local = local_bytes(params_sds, pspecs, mesh)
                 result["cache_local_bytes"] = local_bytes(cache_sds, cspecs, mesh)
 
-            t_lower = time.time()
+            t_lower = obs_timer.now()
             compiled = lowered.compile()
-            t_compile = time.time()
+            t_compile = obs_timer.now()
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis() or {}

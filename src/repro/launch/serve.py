@@ -7,11 +7,12 @@ quantization — the paper's streamlined-deployment path for the LM archs.
 
 import argparse
 import logging
-import time
 
 import numpy as np
 
 import jax
+
+from repro.obs import timer as obs_timer
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models.model import Model
@@ -47,14 +48,14 @@ def main(argv=None):
 
     eng = ServeEngine(model, params, n_slots=args.slots, max_len=args.max_len)
     rng = np.random.default_rng(args.seed)
-    t0 = time.monotonic()
+    t0 = obs_timer.now()
     for i in range(args.requests):
         plen = int(rng.integers(3, 12))
         eng.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
             max_new_tokens=args.max_new))
     steps = eng.run_until_drained()
-    dt = time.monotonic() - t0
+    dt = obs_timer.now() - t0
 
     s = eng.stats()
     log.info("drained %d requests in %d steps / %.2fs", s["n_requests"],

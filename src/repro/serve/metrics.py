@@ -58,26 +58,46 @@ class ServeMetrics:
     def __init__(self, window_s: float = 30.0, start_t: float = 0.0):
         self.window_s = float(window_s)
         self.start_t = float(start_t)
+        #: timestamp of the first recorded event of any kind — the
+        #: throughput window opens here, not at recorder creation (a
+        #: recorder idling long before traffic must not dilute qps)
+        self.first_event_t: Optional[float] = None
         self._completions: Deque[Tuple[float, float]] = collections.deque()
         self._admits: Deque[float] = collections.deque()
         self._sheds: Deque[float] = collections.deque()
         self._waves: Deque[Tuple[float, int, int]] = collections.deque()
 
+    def _mark(self, now: float) -> None:
+        if self.first_event_t is None:
+            self.first_event_t = float(now)
+
     # -- event recorders ---------------------------------------------------
     def record_admit(self, now: float) -> None:
+        self._mark(now)
         self._admits.append(now)
 
     def record_shed(self, now: float) -> None:
+        self._mark(now)
         self._sheds.append(now)
 
     def record_completion(self, now: float, latency_s: float) -> None:
+        self._mark(now)
         self._completions.append((now, latency_s))
 
     def record_wave(self, now: float, n_valid: int, micro_batch: int) -> None:
+        self._mark(now)
         self._waves.append((now, int(n_valid), int(micro_batch)))
 
     # -- window accounting -------------------------------------------------
     def _prune(self, now: float) -> None:
+        """Drop events strictly older than ``now - window_s``.
+
+        The boundary is **inclusive**: an event stamped *exactly* at
+        ``now - window_s`` stays in the window (the comparison is ``<``,
+        not ``<=``). Under a manual clock events routinely land exactly on
+        window edges, so the tie direction is part of the contract the
+        exact-accounting tests rely on — don't flip it.
+        """
         cutoff = now - self.window_s
         while self._completions and self._completions[0][0] < cutoff:
             self._completions.popleft()
@@ -96,8 +116,15 @@ class ServeMetrics:
                              for q in (50, 90, 99))
         else:
             p50 = p90 = p99 = 0.0
-        # the window only opens as far back as the recorder has existed
-        span = max(min(now - self.start_t, self.window_s), 1e-9)
+        # the throughput window only opens as far back as traffic has
+        # existed: the denominator starts at the FIRST recorded event, not
+        # at recorder creation. A server that came up long before its
+        # first request (or spent its cold start shedding everything —
+        # sheds mark the window open too, since shedding time is serving
+        # time) used to have ``span`` pinned at the recorder lifetime,
+        # diluting qps once completions finally arrived.
+        opened = self.first_event_t if self.first_event_t is not None else now
+        span = max(min(now - opened, self.window_s), 1e-9)
         offered = len(self._admits) + len(self._sheds)
         hist: Dict[int, int] = {}
         occ = 0.0

@@ -21,6 +21,8 @@ from typing import Callable, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.obs.tracer import NULL_TRACER
+
 
 @dataclasses.dataclass
 class Replica:
@@ -60,6 +62,10 @@ class ReplicaPool:
             devices = jax.devices() if factory is not None else [None]
         if not devices:
             raise ValueError("no devices to place replicas on")
+        #: per-replica outstanding-work counter sink; the router installs
+        #: its tracer here so placement decisions show up as counter
+        #: tracks (pid 1+i = replica i in the exported timeline)
+        self.tracer = NULL_TRACER
         if len(devices) > 1 and factory is None:
             raise ValueError(
                 f"{len(devices)} devices but no factory: replicas beyond "
@@ -88,11 +94,17 @@ class ReplicaPool:
                 key=lambda r: (r.outstanding_s, r.n_dispatched, r.index))
         r.outstanding_s += float(work_s)
         r.n_dispatched += 1
+        if self.tracer.enabled:
+            self.tracer.counter("outstanding_s", r.outstanding_s,
+                                cat="replica", pid=1 + r.index)
         return r
 
     def complete(self, replica: Replica, work_s: float = 0.0) -> None:
         replica.outstanding_s = max(0.0, replica.outstanding_s
                                     - float(work_s))
+        if self.tracer.enabled:
+            self.tracer.counter("outstanding_s", replica.outstanding_s,
+                                cat="replica", pid=1 + replica.index)
 
     def stats(self) -> List[dict]:
         return [{"replica": r.index,

@@ -36,11 +36,23 @@ from typing import Callable, Deque, Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.obs.tracer import NULL_TRACER
 from repro.serve.clock import SystemClock
 from repro.serve.metrics import ServeMetrics
 from repro.serve.replica import ReplicaPool
 from repro.serve.slo import ServiceModel, SLOController
 from repro.serve.traffic import Trace
+
+
+def _backend_name() -> str:
+    """The platform string stamped on dispatch spans (prediction-error
+    rows group by it); empty when jax isn't importable."""
+    try:
+        import jax
+
+        return str(jax.default_backend())
+    except Exception:  # pragma: no cover
+        return ""
 
 
 @dataclasses.dataclass
@@ -85,11 +97,18 @@ class _Lane:
     """Internal per-model state: pool + queue + policy + metrics."""
 
     def __init__(self, name: str, pool: ReplicaPool, cfg: RouterConfig,
-                 slo: Optional[SLOController], start_t: float):
+                 slo: Optional[SLOController], start_t: float,
+                 service: Optional[ServiceModel] = None, tid: int = 0):
         self.name = name
         self.pool = pool
         self.cfg = cfg
         self.slo = slo
+        #: the raw FIFO-cost-model service estimate (uncorrected by the
+        #: SLO controller's EWMA) — what dispatch spans record as the
+        #: *predicted* wave service time, the learned-cost-model trail
+        self.service = service
+        self.tid = tid                       # trace track for this lane
+        self.n_shed = 0
         self.pending: Deque[ServeRequest] = collections.deque()
         self.metrics = ServeMetrics(window_s=cfg.window_s, start_t=start_t)
         self.micro_batch = int(cfg.micro_batch
@@ -117,27 +136,45 @@ class Router:
                  config: Union[RouterConfig, Dict[str, RouterConfig], None]
                  = None,
                  clock: Optional[object] = None,
-                 service_models: Optional[Dict[str, ServiceModel]] = None):
+                 service_models: Optional[Dict[str, ServiceModel]] = None,
+                 tracer: Optional[object] = None):
         self.clock = clock if clock is not None else SystemClock()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.platform = _backend_name() if self.tracer.enabled else ""
         self._uid = 0
         self.lanes: Dict[str, _Lane] = {}
         now = self.clock.now()
-        for name, model in models.items():
+        for i, (name, model) in enumerate(models.items()):
             cfg = (config.get(name, RouterConfig())
                    if isinstance(config, dict)
                    else (config or RouterConfig()))
             pool = model if isinstance(model, ReplicaPool) \
                 else ReplicaPool(model)
+            if self.tracer.enabled:
+                pool.tracer = self.tracer
+            service = (service_models or {}).get(name)
             slo = None
             if cfg.p99_budget_ms is not None:
-                service = (service_models or {}).get(name)
                 if service is None:
                     service = ServiceModel.from_compiled(
                         pool.replicas[0].model)
                 slo = SLOController(cfg.p99_budget_ms, service,
                                     window_s=cfg.window_s,
                                     headroom=cfg.slo_headroom)
-            self.lanes[name] = _Lane(name, pool, cfg, slo, start_t=now)
+            self.lanes[name] = _Lane(name, pool, cfg, slo, start_t=now,
+                                     service=service, tid=i + 1)
+
+    def trace_names(self) -> Dict[str, Dict]:
+        """Process/track naming maps for ``obs.export.export_chrome``:
+        pid 0 is the router, pid 1+i replica i; one track per lane."""
+        pids = {0: "router"}
+        tids = {}
+        for lane in self.lanes.values():
+            tids[(0, lane.tid)] = f"lane:{lane.name}"
+            for r in lane.pool.replicas:
+                pids[1 + r.index] = f"replica{r.index}"
+                tids[(1 + r.index, lane.tid)] = f"waves:{lane.name}"
+        return {"process_names": pids, "thread_names": tids}
 
     # -- submission --------------------------------------------------------
     def submit(self, model: str, x, arrival_t: Optional[float] = None
@@ -148,6 +185,10 @@ class Router:
         req = ServeRequest(uid=self._uid, model=model, x=np.asarray(x),
                            arrival_t=now)
         self._uid += 1
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("enqueue", t=now, cat="router", tid=lane.tid,
+                       uid=req.uid, model=model)
         if lane.slo is not None:
             lane.slo.observe_arrival(now)
             backlog_waves = len(lane.pending) // lane.micro_batch
@@ -160,10 +201,26 @@ class Router:
             if not lane.slo.admit(now, backlog_waves, lane.micro_batch,
                                   lane.cfg.max_wait_ms / 1e3, lag_s=lag_s):
                 req.shed = True
+                lane.n_shed += 1
                 lane.metrics.record_shed(now)
+                if tr.enabled:
+                    tr.instant("shed", t=now, cat="router", tid=lane.tid,
+                               uid=req.uid, model=model)
+                    tr.counter("shed_total", lane.n_shed, t=now,
+                               tid=lane.tid)
+                    # a shed request's span is its (empty) lifetime: it
+                    # exists in the trace but not in latency populations
+                    tr.add_span("request", now, now, cat="router",
+                                tid=lane.tid,
+                                args={"uid": req.uid, "model": model,
+                                      "shed": True})
                 return req
         lane.metrics.record_admit(now)
         lane.pending.append(req)
+        if tr.enabled:
+            tr.instant("admit", t=now, cat="router", tid=lane.tid,
+                       uid=req.uid, model=model)
+            tr.counter("backlog", len(lane.pending), t=now, tid=lane.tid)
         if lane.cfg.auto_dispatch:
             while len(lane.pending) >= lane.micro_batch:
                 self._dispatch(lane, lane.micro_batch)
@@ -186,6 +243,10 @@ class Router:
         mb = lane.micro_batch
         work_s = (lane.slo.wave_service_s(mb) if lane.slo is not None
                   else 0.0)
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("wave_assemble", cat="router", tid=lane.tid,
+                       model=lane.name, n_valid=n)
         replica = lane.pool.place(work_s)
         xb = np.stack([r.x for r in reqs])
         t0 = self.clock.now()
@@ -201,6 +262,33 @@ class Router:
         lane.metrics.record_wave(done, n, mb)
         if lane.slo is not None:
             lane.slo.observe_service(mb, done - t0)
+        if tr.enabled:
+            # the dispatch span carries the FIFO-cost-model *predicted*
+            # service time next to its measured duration — one
+            # predicted-vs-measured training row per wave (obs.report)
+            args = {"model": lane.name, "platform": self.platform,
+                    "n_valid": n, "micro_batch": mb,
+                    "replica": replica.index}
+            if lane.service is not None:
+                args["predicted_ms"] = \
+                    lane.service.wave_service_s(mb) * 1e3
+                if lane.slo is not None:
+                    # the controller's EWMA-corrected estimate, for
+                    # auditing admission decisions (distinct from the raw
+                    # model prediction above)
+                    args["predicted_ewma_ms"] = work_s * 1e3
+            tr.add_span("wave", t0, done, cat="router",
+                        pid=1 + replica.index, tid=lane.tid, args=args)
+            for r in reqs:
+                # request span: arrival (enqueue) -> completion; duration
+                # is exactly the latency ServeMetrics recorded, so
+                # span-derived percentiles match snapshots to the bit
+                tr.add_span("request", r.arrival_t, done, cat="router",
+                            tid=lane.tid,
+                            args={"uid": r.uid, "model": lane.name})
+            tr.counter("backlog", len(lane.pending), t=done, tid=lane.tid)
+            tr.counter("wave_occupancy", n / max(mb, 1), t=done,
+                       tid=lane.tid)
         return n
 
     # -- event loop hooks --------------------------------------------------

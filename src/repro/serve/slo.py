@@ -116,11 +116,10 @@ def measure_wave_service_s(cm, micro_batch: int, iters: int = 5) -> float:
     """Median wall seconds of one padded wave through ``submit_wave`` —
     the probe ``ServiceModel.recalibrated`` consumes (one compile + one
     discarded warm iteration first, the ``stage_latencies`` convention)."""
-    import time
-
     import jax
 
     from repro.deploy.autotune import default_sample
+    from repro.obs import timer as obs_timer
 
     x = default_sample(cm, micro_batch)
     for _ in range(2):                   # compile + discarded warm
@@ -128,10 +127,10 @@ def measure_wave_service_s(cm, micro_batch: int, iters: int = 5) -> float:
         jax.block_until_ready(y)
     times = []
     for _ in range(max(iters, 1)):
-        t0 = time.perf_counter()
+        t0 = obs_timer.now()
         y, _ = cm.submit_wave(x, micro_batch=micro_batch)
         jax.block_until_ready(y)
-        times.append(time.perf_counter() - t0)
+        times.append(obs_timer.now() - t0)
     times.sort()
     return times[len(times) // 2]
 

@@ -18,7 +18,6 @@ tests/test_serving.py) and lowers unchanged for the dry-run decode cells.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -26,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.obs import timer as obs_timer
 from repro.models.model import Model
 
 
@@ -78,7 +78,7 @@ class ServeEngine:
         return caches, logits[-1]
 
     def submit(self, req: Request):
-        req.submit_t = time.monotonic()
+        req.submit_t = obs_timer.now()
         self.queue.append(req)
 
     def _insert_into_slot(self, slot: int, req: Request):
@@ -99,7 +99,7 @@ class ServeEngine:
         self.caches = jax.tree.map(write_slot, self.caches, one_cache)
         tok = int(jnp.argmax(last_logits[-1]))
         req.output.append(tok)
-        req.first_token_t = time.monotonic()
+        req.first_token_t = obs_timer.now()
         self.active[slot] = req
         self.positions[slot] = len(req.prompt)
         self.last_token[slot, 0] = tok
@@ -114,7 +114,7 @@ class ServeEngine:
             or self.positions[slot] >= self.max_len - 1
         )
         if done:
-            req.done_t = time.monotonic()
+            req.done_t = obs_timer.now()
             self.finished.append(req)
             self.active[slot] = None
         return done
@@ -247,7 +247,7 @@ class TinyModelServer:
             raise KeyError(f"unknown tiny model {model!r}; "
                            f"tenants: {sorted(self.models)}")
         req = TinyRequest(uid=self._uid, model=model, x=np.asarray(x),
-                          submit_t=time.monotonic())
+                          submit_t=obs_timer.now())
         self._uid += 1
         self.queue.append(req)
         self._routed[req.uid] = self.router.submit(model, req.x,

@@ -22,12 +22,12 @@ from __future__ import annotations
 import dataclasses
 import logging
 import statistics
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
 from repro.checkpoint.checkpoint import CheckpointManager, latest_step
+from repro.obs import timer as obs_timer
 
 log = logging.getLogger("repro.train")
 
@@ -67,9 +67,11 @@ def run_training(
     batch_fn: Callable[[int], Any],
     cfg: LoopConfig,
     step_hook: Optional[Callable[[int], None]] = None,
-    time_fn: Callable[[], float] = time.monotonic,
+    time_fn: Optional[Callable[[], float]] = None,
 ) -> LoopResult:
     """Run (or resume) training until cfg.total_steps."""
+    if time_fn is None:
+        time_fn = obs_timer.now   # injectable process-wide clock
     mgr = CheckpointManager(cfg.ckpt_dir, every=cfg.ckpt_every, keep_n=cfg.keep_n)
     state = init_state
     start = 0

@@ -1,21 +1,20 @@
 """Deterministic-clock unit tests for the MLPerf-Tiny scenario runtime.
 
 The scenario functions (``deploy.scenarios``) read wall time only through
-the module-level ``time`` binding, so a fake clock object monkeypatched in
-its place makes every latency, percentile, and throughput number exactly
-computable: the fake ``infer`` advances the clock by a scripted service
-time, ``sleep`` advances it by the requested amount, and the tests then
-reproduce the expected numbers with independent arithmetic — percentile
-math, MultiStream step accounting, Offline per-query amortization, the
-Server mode's Poisson arrival bookkeeping (latency = queueing delay +
-service), and the ``stage_ms`` breakdown summing to the end-to-end
-latency.
+the process-wide injectable obs timer (``repro.obs.timer``), so a fake
+clock installed there makes every latency, percentile, and throughput
+number exactly computable: the fake ``infer`` advances the clock by a
+scripted service time, ``sleep`` advances it by the requested amount, and
+the tests then reproduce the expected numbers with independent arithmetic
+— percentile math, MultiStream step accounting, Offline per-query
+amortization, the Server mode's Poisson arrival bookkeeping (latency =
+queueing delay + service), and the ``stage_ms`` breakdown summing to the
+end-to-end latency.
 """
 
 import numpy as np
 import pytest
 
-import repro.deploy.scenarios as sc
 from repro.deploy.scenarios import (
     _percentiles,
     multi_stream,
@@ -25,16 +24,20 @@ from repro.deploy.scenarios import (
     single_stream,
     streaming_pipeline,
 )
+from repro.obs import timer as obs_timer
 
 
 class FakeClock:
-    """perf_counter/sleep stand-in: time only moves when told to."""
+    """now/sleep stand-in: time only moves when told to."""
 
     def __init__(self):
         self.t = 0.0
 
-    def perf_counter(self) -> float:
+    def now(self) -> float:
         return self.t
+
+    # historical alias kept so tests can read the clock either way
+    perf_counter = now
 
     def sleep(self, s: float):
         assert s >= 0
@@ -45,10 +48,10 @@ class FakeClock:
 
 
 @pytest.fixture()
-def clock(monkeypatch):
+def clock():
     ck = FakeClock()
-    monkeypatch.setattr(sc, "time", ck)
-    return ck
+    with obs_timer.fake(ck):
+        yield ck
 
 
 def _mk(i):
@@ -258,8 +261,6 @@ def test_stage_ms_breakdown_sums_to_end_to_end(clock, monkeypatch):
     """``stage_latencies`` accounting: with scripted per-stage costs the
     breakdown must recover each stage cost exactly and sum to the
     end-to-end latency of the chained pipeline."""
-    import time as _stdlib_time
-
     from repro.core.qir import export_qmlp
     from repro.deploy import compile_graph
     from repro.models.tiny import KWSMLP
@@ -271,8 +272,7 @@ def test_stage_ms_breakdown_sums_to_end_to_end(clock, monkeypatch):
     graph = export_qmlp(hidden_defs, params["hidden"], params["head"])
     cm = compile_graph(graph, in_scale=1.0 / 127.0, use_pallas=False)
 
-    # stage_latencies reads the *stdlib* clock; route it to the fake too
-    monkeypatch.setattr(_stdlib_time, "perf_counter", clock.perf_counter)
+    # stage_latencies reads the obs timer, already faked by the fixture
     costs = [0.002 * (i + 1) for i in range(len(cm.schedule.stages))]
 
     def fake_fn(c):
