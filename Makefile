@@ -1,5 +1,5 @@
 .PHONY: test test-fast bench bench-table6 bench-scenarios bench-serve \
-	bench-obs trace-demo lint-clock example
+	bench-obs trace-demo lint lint-clock lint-residency example
 
 test:            ## full tier-1 suite
 	./scripts/test.sh
@@ -25,8 +25,13 @@ bench-obs:       ## NullTracer overhead assert + FIFO prediction-error table
 trace-demo:      ## one traced server run -> Perfetto timeline artifact
 	PYTHONPATH=src:. python benchmarks/obs_bench.py --demo
 
+lint: lint-clock lint-residency  ## every static check CI runs
+
 lint-clock:      ## no raw stdlib clock reads outside repro.obs.timer
 	python scripts/check_no_raw_clock.py
+
+lint-residency:  ## megakernel plans never exceed the VMEM cap (goldens)
+	python scripts/check_megakernel_residency.py
 
 example:         ## the end-to-end codesign + compiled-deployment example
 	PYTHONPATH=src python examples/mlperf_tiny_codesign.py

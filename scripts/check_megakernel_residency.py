@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""CI check: the megakernel residency planner's byte accounting is sound.
+
+For every golden fixture (``tests/golden/*.qir.json``) this compiles the
+frozen graph and asserts, for each plan the planner emits, that
+
+  * the working set never exceeds the VMEM cap it was admitted under
+    (``core.bops.MEGAKERNEL_VMEM_BYTES`` by default);
+  * the component bytes (weights + banks + tiles) re-add to the total and
+    match a fresh ``megakernel_residency_bytes`` pass over the planned run
+    — the plan's audit trail cannot drift from the accounting;
+  * the plan covers a run of at least ``MEGAKERNEL_MIN_STAGES`` fused
+    dense stages inside a compiled segment;
+
+and that the planner behaves at the boundaries: the MLP goldens (kws, ad)
+MUST admit a plan (their whole dense chain fits VMEM — the paper-class
+case), and a deliberately tiny budget must reject everything (the staged
+fallback the bit-exactness tests pin).
+
+Exits non-zero on any violation; prints one line per model checked.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+#: MLP goldens whose dense chains are known to fit resident.
+MUST_PLAN = {"kws", "ad"}
+
+
+def check_model(name: str, path: str) -> int:
+    from repro.core.bops import megakernel_residency_bytes
+    from repro.core.qir import Graph
+    from repro.deploy import compile_graph
+    from repro.deploy.lower import MEGAKERNEL_MIN_STAGES, plan_megakernel
+    from repro.deploy.lower import FusedThresholdStage
+
+    graph = Graph.load(path)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False)
+    failures = 0
+    plans = sorted(cm._mega_plans.items())
+    for k, plan in plans:
+        run = cm.schedule.stages[plan.start:plan.stop]
+        res = megakernel_residency_bytes(run, block_m=plan.block_m)
+        ok = (plan.total_bytes <= plan.budget_bytes
+              and plan.total_bytes == (plan.weight_bytes + plan.bank_bytes
+                                       + plan.tile_bytes)
+              and plan.total_bytes == res["total_bytes"]
+              and plan.weight_bytes == res["weight_bytes"]
+              and plan.bank_bytes == res["bank_bytes"]
+              and plan.tile_bytes == res["tile_bytes"]
+              and plan.n_stages >= MEGAKERNEL_MIN_STAGES
+              and all(isinstance(s, FusedThresholdStage) for s in run)
+              and cm.segments[k].compiled)
+        print(f"{'ok  ' if ok else 'FAIL'} {name} segment {k}: stages "
+              f"[{plan.start},{plan.stop}) resident {plan.total_bytes} "
+              f"<= cap {plan.budget_bytes} "
+              f"(w={plan.weight_bytes} banks={plan.bank_bytes} "
+              f"tiles={plan.tile_bytes})")
+        failures += 0 if ok else 1
+    if name in MUST_PLAN and not plans:
+        print(f"FAIL {name}: MLP golden admitted no megakernel plan")
+        failures += 1
+    if not plans and name not in MUST_PLAN:
+        print(f"ok   {name}: no fused dense run (staged dispatch only)")
+    # a tiny budget must reject every segment: the staged fallback exists
+    for seg in cm.segments:
+        if plan_megakernel(cm.schedule.stages, seg, budget_bytes=64):
+            print(f"FAIL {name}: 64-byte budget still admitted a plan")
+            failures += 1
+    return failures
+
+
+def main() -> int:
+    paths = sorted(glob.glob(os.path.join(GOLDEN_DIR, "*.qir.json")))
+    if not paths:
+        print(f"no golden fixtures under {GOLDEN_DIR!r}")
+        return 1
+    failures = 0
+    for path in paths:
+        name = os.path.basename(path).split(".")[0]
+        failures += check_model(name, path)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

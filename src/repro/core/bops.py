@@ -228,6 +228,65 @@ def schedule_cost(stages: Iterable) -> ModelCost:
 
 
 # ---------------------------------------------------------------------------
+# megakernel residency accounting + residency-aware traffic model
+# ---------------------------------------------------------------------------
+
+#: VMEM cap the megakernel residency planner budgets against — the same
+#: conservative per-program working-set budget the block_h / block_mn
+#: models use (``deploy.autotune.VMEM_BUDGET_BYTES``; real cores have
+#: ~16 MB, the margin covers compiler padding to (8, 128) tiles and the
+#: revolving input/output row blocks).
+MEGAKERNEL_VMEM_BYTES = 1 << 21
+
+
+def megakernel_residency_bytes(stages, block_m: int = 128) -> dict:
+    """VMEM working set of an entire FusedThresholdStage run fused into one
+    resident megakernel (``kernels.megakernel``): every stage's int8 weight
+    matrix and int32 threshold bank live in VMEM for the whole wave, plus
+    the two revolving inter-stage FIFO tiles (int32, ``block_m`` rows by
+    the widest intermediate dim) and the input/output row blocks. This is
+    the byte accounting ``deploy.lower.plan_megakernel`` sums against
+    ``MEGAKERNEL_VMEM_BYTES`` — all components reported so the audit trail
+    (and ``scripts/check_megakernel_residency.py``) can re-add them.
+    """
+    stages = list(stages)
+    weight = sum(int(math.prod(s.stage.w_int.shape)) for s in stages)
+    bank = sum(4 * int(math.prod(s.stage.thresholds.shape)) for s in stages)
+    dims = [int(stages[0].in_dim)] + [int(s.out_dim) for s in stages]
+    inter = max(dims[1:-1], default=0)
+    tile = (4 * block_m * (dims[0] + dims[-1])    # input + output row blocks
+            + 2 * 4 * block_m * inter)            # two revolving FIFO tiles
+    return {"weight_bytes": int(weight), "bank_bytes": int(bank),
+            "tile_bytes": int(tile),
+            "total_bytes": int(weight + bank + tile)}
+
+
+def megakernel_traffic_bytes(stages, wave_rows: int) -> float:
+    """Residency-aware HBM traffic of one fused wave: parameters are
+    fetched ONCE (they stay resident across the whole wave), activations
+    cross HBM only at the segment boundary — the wave input is read and the
+    final codes written; every inter-stage tensor lives in VMEM scratch."""
+    stages = list(stages)
+    res = megakernel_residency_bytes(stages)
+    io = 4.0 * wave_rows * (int(stages[0].in_dim) + int(stages[-1].out_dim))
+    return io + res["weight_bytes"] + res["bank_bytes"]
+
+
+def staged_traffic_bytes(stages, wave_rows: int) -> float:
+    """The per-stage dispatch baseline the megakernel deletes: every stage
+    program re-reads its parameters and round-trips its input and output
+    activations through HBM (the inter-stage write+read the fused kernel
+    keeps on-chip). The difference vs ``megakernel_traffic_bytes`` is the
+    modeled saving the autotuner ranks the megakernel/staged choice by."""
+    total = 0.0
+    for s in stages:
+        total += 4.0 * wave_rows * (int(s.in_dim) + int(s.out_dim))
+        total += float(math.prod(s.stage.w_int.shape))
+        total += 4.0 * float(math.prod(s.stage.thresholds.shape))
+    return total
+
+
+# ---------------------------------------------------------------------------
 # LM-scale model FLOPs (used by launch/roofline.py)
 # ---------------------------------------------------------------------------
 

@@ -55,12 +55,14 @@ from repro.deploy.lower import (  # noqa: F401
     FusedConvThresholdStage,
     FusedThresholdStage,
     IntPoolStage,
+    MegakernelSegment,
     RefChainStage,
     Segment,
     StageSchedule,
     group_segments,
     im2col,
     lower_graph,
+    plan_megakernel,
     stage_for,
 )
 from repro.deploy.scenarios import (  # noqa: F401

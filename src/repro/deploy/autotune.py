@@ -17,6 +17,13 @@ before you build):
      traffic (``core.bops.conv_input_band_bytes`` — halo rows re-fetched
      per block) subject to the kernel's VMEM budget for the double-buffered
      band and the int32 accumulator.
+  3. **Segment dispatch (megakernel vs staged)** — where the residency
+     planner (``deploy.lower.plan_megakernel``) admits a whole-network-
+     resident megakernel, the two dispatch modes are ranked by the
+     residency traffic model (``core.bops.megakernel_traffic_bytes`` vs
+     ``staged_traffic_bytes``) and refined by measured probes of both modes
+     at the winning micro-batch; the choice persists as
+     ``TunedConfig.segment_mode`` (schema v3).
 
 The winning ``TunedConfig`` is cached as a JSON artifact per
 (model, platform) so compile_graph / the scenario benchmarks consume the
@@ -46,7 +53,8 @@ from repro.deploy.lower import FusedConvThresholdStage, FusedThresholdStage
 from repro.obs import timer as obs_timer
 from repro.obs.tracer import NULL_TRACER
 
-CONFIG_VERSION = 2   # v2: + dense block_m/block_n (older caches re-search)
+CONFIG_VERSION = 3   # v3: + megakernel/staged segment_mode (older caches
+                     # re-search; v2 added dense block_m/block_n)
 
 #: Candidate micro-batch sizes (powers of two; filtered to <= batch).
 MICRO_CANDIDATES = (1, 2, 4, 8, 16, 32, 64)
@@ -96,6 +104,8 @@ class TunedConfig:
     block_h_model: Dict[str, Dict] = dataclasses.field(default_factory=dict)
     block_mn: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
     block_mn_model: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    segment_mode: str = "staged"      # "megakernel" | "staged" dispatch
+    segment_mode_model: Dict = dataclasses.field(default_factory=dict)
     seed_stage_ms: Optional[List[Dict]] = None   # stage_latencies seed
     probe_ms: Optional[Dict[str, float]] = None  # micro_batch -> median ms
     version: int = CONFIG_VERSION
@@ -444,6 +454,56 @@ def autotune_model(cm, batch: int = 64,
             block_mn[s.name] = [plan["block_m"], plan["block_n"]]
             block_mn_model[s.name] = plan
 
+    # -- segment dispatch: megakernel vs staged ---------------------------
+    # Model first: the staged lax.map re-streams every stage's weights and
+    # bank once per micro-batch, the megakernel fetches them once for the
+    # whole flattened wave. Probe second: both modes measured at the
+    # winning micro-batch; ties (e.g. deterministic probes) break toward
+    # the mode the traffic model prefers.
+    from repro.core.bops import (megakernel_traffic_bytes,
+                                 staged_traffic_bytes)
+    from repro.deploy.lower import plan_megakernel
+
+    segment_mode = "staged"
+    segment_mode_model: Dict = {}
+    wave = int(winner["micro_batch"])
+    plans = [p for p in (plan_megakernel(cm.schedule.stages, seg)
+                         for seg in cm.segments) if p is not None]
+    if plans:
+        n_micro = -(-batch // wave)
+        mega_b = staged_b = 0.0
+        for p in plans:
+            run = cm.schedule.stages[p.start:p.stop]
+            mega_b += megakernel_traffic_bytes(run, n_micro * wave)
+            staged_b += n_micro * staged_traffic_bytes(run, wave)
+        segment_mode_model = {
+            "wave_rows": wave, "n_micro": n_micro,
+            "plans": [[p.start, p.stop] for p in plans],
+            "megakernel_bytes": float(mega_b),
+            "staged_bytes": float(staged_b),
+            "bytes_saved": float(staged_b - mega_b),
+        }
+        model_pick = "megakernel" if mega_b <= staged_b else "staged"
+        prev_mode = cm.megakernel
+        try:
+            cm.set_megakernel(True)
+            t_mega = float(probe_fn(cm, x, wave))
+            cm.set_megakernel(False)
+            t_staged = float(probe_fn(cm, x, wave))
+        finally:
+            cm.set_megakernel(prev_mode)
+        segment_mode_model["probe_ms"] = {"megakernel": t_mega * 1e3,
+                                          "staged": t_staged * 1e3}
+        if t_mega < t_staged:
+            segment_mode = "megakernel"
+        elif t_mega == t_staged:
+            segment_mode = model_pick
+        segment_mode_model["model_pick"] = model_pick
+        if tr.enabled:
+            tr.instant("segment_mode", cat="autotune", key=key,
+                       mode=segment_mode, model_pick=model_pick,
+                       bytes_saved=float(staged_b - mega_b))
+
     # traffic of the tuned schedule (block_h applied) — the modeled byte
     # number reported next to the choice
     saved = {s.name: s.block_h for s in cm.schedule.stages
@@ -469,6 +529,8 @@ def autotune_model(cm, batch: int = 64,
         block_h_model=block_h_model,
         block_mn=block_mn,
         block_mn_model=block_mn_model,
+        segment_mode=segment_mode,
+        segment_mode_model=segment_mode_model,
         seed_stage_ms=seed_stage_ms,
         probe_ms=probe_ms or None,
     )

@@ -53,11 +53,13 @@ from repro.deploy.lower import (
     FusedConvThresholdStage,
     FusedThresholdStage,
     IntPoolStage,
+    MegakernelSegment,
     RefChainStage,
     Segment,
     StageSchedule,
     group_segments,
     lower_graph,
+    plan_megakernel,
 )
 
 #: Historical default micro-batch; used only when no tuned config is applied.
@@ -103,6 +105,9 @@ class StreamingStats:
     sim_cycles: int
     mode: str = "host"
     segments: Optional[List[Tuple[int, int]]] = None
+    #: stage ranges that executed as whole-network-resident megakernels
+    #: (``docs/megakernel.md``); empty/None when every segment ran staged
+    megakernel: Optional[List[Tuple[int, int]]] = None
 
 
 class CompiledTinyModel:
@@ -111,12 +116,20 @@ class CompiledTinyModel:
     def __init__(self, schedule: StageSchedule, graph: Optional[Graph] = None,
                  use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None,
+                 megakernel: Optional[bool] = None,
+                 megakernel_budget_bytes: Optional[int] = None,
                  tracer=None):
         self.schedule = schedule
         self.graph = graph
         self.use_pallas = _on_tpu() if use_pallas is None else use_pallas
         self.interpret = interpret
         self.tuned = None          # deploy.autotune.TunedConfig, if applied
+        #: megakernel dispatch: None = auto (fused whenever the residency
+        #: planner admits the segment), True = same but assert-intent,
+        #: False = force the per-stage reference path. The autotuner's
+        #: measured megakernel-vs-staged choice lands here via apply_tuned.
+        self.megakernel = megakernel
+        self.megakernel_budget_bytes = megakernel_budget_bytes
         #: obs.Tracer sink for segment/stage spans and FIFO occupancy
         #: counters; NULL_TRACER keeps every instrumentation site a no-op
         self.tracer = tracer if tracer is not None else NULL_TRACER
@@ -127,15 +140,39 @@ class CompiledTinyModel:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         return self
 
+    def set_megakernel(self, mode: Optional[bool],
+                       budget_bytes: Optional[int] = None
+                       ) -> "CompiledTinyModel":
+        """Re-plan megakernel dispatch (None = auto / True / False) and drop
+        the stale compiled programs; ``budget_bytes`` overrides the planner's
+        VMEM cap (tests force the fallback with a tiny one) and None restores
+        the default cap. Returns self."""
+        self.megakernel = mode
+        self.megakernel_budget_bytes = budget_bytes
+        self._rebuild()
+        return self
+
     def _rebuild(self):
         """(Re)create every compiled entry point from the current schedule —
         called at construction and after ``apply_tuned`` mutates stage
         parameters (jit closures capture the stage objects at trace time, so
         stale programs must be dropped)."""
+        # residency-plan megakernel runs per compiled segment first — the
+        # offline and segment programs below dispatch through the plans
+        self._mega_plans: Dict[int, MegakernelSegment] = {}
+        self._mega_by_start: Dict[int, MegakernelSegment] = {}
+        self.segments: List[Segment] = group_segments(self.schedule.stages)
+        if self.megakernel is not False:
+            for k, seg in enumerate(self.segments):
+                plan = plan_megakernel(
+                    self.schedule.stages, seg,
+                    budget_bytes=self.megakernel_budget_bytes)
+                if plan is not None:
+                    self._mega_plans[k] = plan
+                    self._mega_by_start[plan.start] = plan
         self._offline = jax.jit(self._run_all)
         self._stage_fns = [jax.jit(self._make_stage_fn(s))
                            for s in self.schedule.stages]
-        self.segments: List[Segment] = group_segments(self.schedule.stages)
         self._segment_fns: Dict[int, Callable] = {}
         self._plan_cache: Dict[Tuple[int, int], Tuple[List[int], int]] = {}
 
@@ -146,9 +183,10 @@ class CompiledTinyModel:
 
     def apply_tuned(self, cfg) -> "CompiledTinyModel":
         """Adopt an autotuned config (``deploy.autotune.TunedConfig``): the
-        streaming default micro-batch, per-conv-stage ``block_h``, and
-        per-dense-stage ``block_m``/``block_n`` replace the magic
-        constants. Returns self for chaining."""
+        streaming default micro-batch, per-conv-stage ``block_h``,
+        per-dense-stage ``block_m``/``block_n``, and the measured
+        megakernel-vs-staged segment dispatch choice (schema v3) replace
+        the magic constants. Returns self for chaining."""
         for s in self.schedule.stages:
             if isinstance(s, FusedConvThresholdStage):
                 bh = cfg.block_h.get(s.name)
@@ -158,6 +196,9 @@ class CompiledTinyModel:
                 mn = getattr(cfg, "block_mn", {}).get(s.name)
                 if mn is not None:
                     s.block_m, s.block_n = int(mn[0]), int(mn[1])
+        mode = getattr(cfg, "segment_mode", None)
+        if mode in ("megakernel", "staged"):
+            self.megakernel = mode == "megakernel"
         self.tuned = cfg
         self._rebuild()
         return self
@@ -179,10 +220,37 @@ class CompiledTinyModel:
     def _make_stage_fn(self, s) -> Callable:
         return lambda h: self._apply_stage(s, h)
 
+    def _apply_mega(self, plan: MegakernelSegment, h):
+        """One planned stage run as a single program: the Pallas megakernel
+        (weights/banks resident in VMEM, inter-stage tiles in scratch) on
+        the kernel path, or the same chain as one straight-line fused XLA
+        computation on CPU — either way ZERO per-stage dispatch, and
+        bit-identical to the staged reference (order-free integer ops)."""
+        stages = self.schedule.stages[plan.start:plan.stop]
+        if self.use_pallas:
+            from repro.kernels import ops
+
+            return ops.mlp_megakernel(
+                h.astype(jnp.int32),
+                tuple(s.stage.w_int for s in stages),
+                tuple(s.stage.thresholds for s in stages),
+                block_m=plan.block_m, interpret=self.interpret)
+        for s in stages:
+            h = s.apply_fast(h)
+        return h
+
     def _run_all(self, x_int):
         h = x_int
-        for s in self.schedule.stages:
-            h = self._apply_stage(s, h)
+        stages = self.schedule.stages
+        i = 0
+        while i < len(stages):
+            plan = self._mega_by_start.get(i)
+            if plan is not None:
+                h = self._apply_mega(plan, h)
+                i = plan.stop
+            else:
+                h = self._apply_stage(stages[i], h)
+                i += 1
         return h
 
     def offline(self, x_int) -> jnp.ndarray:
@@ -437,27 +505,52 @@ class CompiledTinyModel:
                             tid=k + 1,
                             args={"segment": k, "mode": mode,
                                   "compiled": bool(seg.compiled),
+                                  "megakernel": k in self._mega_plans,
                                   "stages": [seg.start, seg.stop]})
         return wave
 
     # -- streaming, compiled (the deployment hot path) ---------------------
     def _segment_fn(self, k: int) -> Callable:
-        """One jit program running segment k's whole micro-batch wave:
-        ``jax.lax.map`` advances every micro-batch through the segment's
-        stage chain on device. The wave buffer is donated between segment
-        programs on backends that support donation (TPU/GPU), so segment
-        boundaries don't double-buffer the whole wave."""
+        """One jit program running segment k's whole micro-batch wave.
+
+        Staged form: ``jax.lax.map`` advances every micro-batch through the
+        segment's stage chain on device. When the residency planner admitted
+        a megakernel for this segment, the planned stage run executes as ONE
+        resident program over the *flattened* wave instead — no per-stage
+        dispatch and no per-micro-batch loop (row-independent stages make
+        the flattening exact); only the segment's pre/post remainder stages
+        (e.g. the float head) still ride ``lax.map``. Either way the wave
+        buffer is donated between segment programs on backends that support
+        donation (TPU/GPU), so segment boundaries don't double-buffer the
+        whole wave."""
         fn = self._segment_fns.get(k)
         if fn is None:
             seg = self.segments[k]
+            plan = self._mega_plans.get(k)
             stages = self.schedule.stages[seg.start:seg.stop]
 
-            def run_wave(wave):
-                def body(h):
-                    for s in stages:
-                        h = self._apply_stage(s, h)
-                    return h
-                return jax.lax.map(body, wave)
+            def chain(run, h):
+                for s in run:
+                    h = self._apply_stage(s, h)
+                return h
+
+            if plan is None:
+                def run_wave(wave):
+                    return jax.lax.map(lambda h: chain(stages, h), wave)
+            else:
+                pre = self.schedule.stages[seg.start:plan.start]
+                post = self.schedule.stages[plan.stop:seg.stop]
+
+                def run_wave(wave):
+                    if pre:
+                        wave = jax.lax.map(lambda h: chain(pre, h), wave)
+                    n_micro, mb = wave.shape[0], wave.shape[1]
+                    flat = wave.reshape((n_micro * mb,) + wave.shape[2:])
+                    flat = self._apply_mega(plan, flat)
+                    wave = flat.reshape((n_micro, mb) + flat.shape[1:])
+                    if post:
+                        wave = jax.lax.map(lambda h: chain(post, h), wave)
+                    return wave
 
             donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
             fn = jax.jit(run_wave, donate_argnums=donate)
@@ -489,13 +582,16 @@ class CompiledTinyModel:
                                  max_occupancy=[d - 1 for d in depths],
                                  sim_cycles=sim_cycles, mode="compiled",
                                  segments=[(s.start, s.stop)
-                                           for s in self.segments])
+                                           for s in self.segments],
+                                 megakernel=[(p.start, p.stop) for p in
+                                             self._mega_plans.values()])
 
 
 def compile_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
                   use_pallas: Optional[bool] = None,
                   interpret: Optional[bool] = None,
                   conv_lowering: Optional[str] = None,
+                  megakernel: Optional[bool] = None,
                   autotune: bool = False,
                   tuned=None, tracer=None) -> CompiledTinyModel:
     """The one-call deployment entry point: QIR json graph -> executor.
@@ -503,6 +599,10 @@ def compile_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
     ``conv_lowering`` picks the conv stage algorithm ("direct" fused kernel
     by default, "im2col" fallback) for both offline and streaming modes —
     the stage methods the executor dispatches through carry the choice.
+    ``megakernel`` forces the whole-network-resident fused dispatch on
+    (True) or off (False); the default None lets the residency planner
+    decide per segment (``docs/megakernel.md``), and an applied tuned
+    config's measured ``segment_mode`` choice overrides it.
 
     ``tuned`` applies a prebuilt ``deploy.autotune.TunedConfig``;
     ``autotune=True`` instead loads (or searches and caches) the config for
@@ -512,7 +612,8 @@ def compile_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
     schedule = lower_graph(graph, in_scale=in_scale,
                            conv_lowering=conv_lowering)
     cm = CompiledTinyModel(schedule, graph=graph, use_pallas=use_pallas,
-                           interpret=interpret, tracer=tracer)
+                           interpret=interpret, megakernel=megakernel,
+                           tracer=tracer)
     if tuned is not None:
         cm.apply_tuned(tuned)
     elif autotune:

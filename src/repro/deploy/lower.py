@@ -558,6 +558,89 @@ def group_segments(stages: Sequence[Stage]) -> List[Segment]:
 
 
 # ---------------------------------------------------------------------------
+# megakernel residency planner (the whole-network-resident fused path)
+# ---------------------------------------------------------------------------
+
+#: Fusing one stage is what ``threshold_matmul`` already does — the
+#: megakernel only pays off once there is an inter-stage boundary to delete.
+MEGAKERNEL_MIN_STAGES = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class MegakernelSegment:
+    """A planned whole-network-resident kernel covering stages
+    ``[start, stop)`` — a run of consecutive ``FusedThresholdStage``s whose
+    entire working set (weights + threshold banks + inter-stage FIFO tiles)
+    fits the VMEM cap, so the executor dispatches the run as ONE program
+    (``kernels.megakernel``) instead of one program per stage. Carries the
+    planner's byte accounting as the audit trail (``docs/megakernel.md``).
+    """
+
+    start: int          # first fused stage index (inclusive)
+    stop: int           # last fused stage index (exclusive)
+    block_m: int        # wave row block the tile accounting assumed
+    weight_bytes: int   # resident int8 weight matrices, all stages
+    bank_bytes: int     # resident int32 threshold banks, all stages
+    tile_bytes: int     # in/out row blocks + two revolving FIFO tiles
+    budget_bytes: int   # the VMEM cap the plan was admitted under
+
+    @property
+    def n_stages(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def total_bytes(self) -> int:
+        return self.weight_bytes + self.bank_bytes + self.tile_bytes
+
+
+def plan_megakernel(stages: Sequence[Stage], segment: Segment, *,
+                    block_m: int = 128,
+                    budget_bytes: Optional[int] = None
+                    ) -> Optional[MegakernelSegment]:
+    """Walk one compiled ``Segment`` and plan its resident megakernel.
+
+    Finds the longest run of consecutive ``FusedThresholdStage``s inside the
+    segment (the MLP models are one segment that is entirely such a run,
+    plus the float head) and admits it when the residency byte accounting
+    (``core.bops.megakernel_residency_bytes``: every weight matrix, every
+    threshold bank, the inter-stage FIFO tiles) fits the VMEM cap. Returns
+    ``None`` when no run is long enough or the working set exceeds the
+    budget — the executor then falls back to the per-stage path, which
+    stays the bit-exactness reference.
+    """
+    from repro.core.bops import (MEGAKERNEL_VMEM_BYTES,
+                                 megakernel_residency_bytes)
+
+    budget = MEGAKERNEL_VMEM_BYTES if budget_bytes is None else budget_bytes
+    if not segment.compiled:
+        return None
+    best = None          # longest run wins; earlier run breaks length ties
+    i = segment.start
+    while i < segment.stop:
+        if isinstance(stages[i], FusedThresholdStage):
+            j = i
+            while j < segment.stop and isinstance(stages[j],
+                                                  FusedThresholdStage):
+                j += 1
+            if best is None or (j - i) > (best[1] - best[0]):
+                best = (i, j)
+            i = j
+        else:
+            i += 1
+    if best is None or best[1] - best[0] < MEGAKERNEL_MIN_STAGES:
+        return None
+    run = stages[best[0]:best[1]]
+    res = megakernel_residency_bytes(run, block_m=block_m)
+    if res["total_bytes"] > budget:
+        return None      # does not fit resident: staged path
+    return MegakernelSegment(start=best[0], stop=best[1], block_m=block_m,
+                             weight_bytes=res["weight_bytes"],
+                             bank_bytes=res["bank_bytes"],
+                             tile_bytes=res["tile_bytes"],
+                             budget_bytes=budget)
+
+
+# ---------------------------------------------------------------------------
 # pattern matcher
 # ---------------------------------------------------------------------------
 

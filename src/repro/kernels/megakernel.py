@@ -1,0 +1,149 @@
+"""Whole-network-resident megakernel: an entire MLP segment in ONE kernel.
+
+The paper's FPGA dataflow architectures (and the FINN/hls4ml designs they
+build on) win latency because *every* layer is on-fabric simultaneously —
+weights resident, activations flowing layer to layer through on-chip FIFOs,
+zero per-layer program dispatch. This kernel is the software analogue for
+the KWS/AD-class MLP schedules, whose weights and threshold banks total
+well under VMEM:
+
+  * every stage's weight matrix and threshold bank is fetched ONCE per wave
+    (constant block-index maps over a sequential grid — the Pallas pipeline
+    never refetches a block whose index is unchanged) and stays resident
+    in VMEM for all row blocks;
+  * the inter-stage "FIFOs" are two revolving VMEM scratch tiles: each
+    stage's int32 accumulator is thresholded into integer codes and written
+    straight into the tile the next stage reads — activations never leave
+    the chip between layers;
+  * the grid iterates over the micro-batch wave's row blocks, so one
+    ``pallas_call`` replaces the whole per-stage program sequence.
+
+The per-stage path (``threshold_matmul`` / ``apply_fast``) stays as the
+bit-exactness reference — integer accumulation and threshold counting are
+order-free, so both paths produce identical integers (asserted on the
+golden fixtures). The residency planner (``deploy.lower.plan_megakernel``)
+decides when a segment fits; see ``docs/megakernel.md``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+
+def _count_thresholds(acc, thr_ref, n_steps: int):
+    """Threshold count over one resident (S, N) bank slab: out = #(acc >= T)."""
+    out = jnp.zeros_like(acc)
+
+    def body(s, out):
+        t = jax.lax.dynamic_slice_in_dim(thr_ref[...], s, 1, axis=0)  # (1, N)
+        return out + (acc >= t).astype(jnp.int32)
+
+    return jax.lax.fori_loop(0, n_steps, body, out)
+
+
+def _mega_kernel(x_ref, *refs, n_stages: int, n_steps: Sequence[int],
+                 out_dims: Sequence[int]):
+    """One row block of the wave through ALL stages, entirely on-chip.
+
+    ``refs`` layout (pallas_call order): the n_stages resident weight refs,
+    the n_stages resident transposed-bank refs, the output ref, then the two
+    revolving inter-stage FIFO tiles (absent when n_stages == 1).
+    """
+    w_refs = refs[:n_stages]
+    t_refs = refs[n_stages:2 * n_stages]
+    o_ref = refs[2 * n_stages]
+    fifo = refs[2 * n_stages + 1:]
+
+    h = x_ref[...].astype(jnp.int32)                    # (bm, K0)
+    for d in range(n_stages):
+        acc = jax.lax.dot_general(                      # int32 accumulator,
+            h, w_refs[d][...].astype(jnp.int32),        # never leaves VMEM
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        codes = _count_thresholds(acc, t_refs[d], int(n_steps[d]))
+        if d == n_stages - 1:
+            o_ref[...] = codes
+        else:
+            buf = fifo[d % 2]                           # inter-stage FIFO tile
+            buf[:, :out_dims[d]] = codes
+            h = buf[:, :out_dims[d]]
+
+
+def mlp_megakernel(x_int: jnp.ndarray,
+                   weights: Sequence[jnp.ndarray],
+                   banks: Sequence[jnp.ndarray], *,
+                   block_m: int = 128,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Run a whole FusedThresholdStage chain as one Pallas program.
+
+    ``x_int`` is the flattened wave ``(M, K0)`` of int32 codes; ``weights``
+    the per-stage ``(K_d, N_d)`` int8 matrices (``K_{d+1} == N_d``);
+    ``banks`` the per-stage ``(N_d, S_d)`` int32 sorted threshold banks.
+    Returns the LAST stage's ``(M, N_last)`` int32 codes; intermediate
+    activations exist only in the kernel's VMEM scratch. M must divide
+    ``block_m`` (``ops.mlp_megakernel`` pads).
+    """
+    assert len(weights) == len(banks) and weights
+    M, K0 = x_int.shape
+    n_stages = len(weights)
+    assert M % block_m == 0, (M, block_m)
+    dims = []
+    k_prev = K0
+    for w, b in zip(weights, banks):
+        assert w.shape[0] == k_prev, (w.shape, k_prev)
+        assert b.shape[0] == w.shape[1], (b.shape, w.shape)
+        k_prev = int(w.shape[1])
+        dims.append(k_prev)
+    thr_t = [b.T.astype(jnp.int32) for b in banks]      # (S, N): lanes = chans
+
+    # constant index maps: weights/banks are fetched once and stay resident
+    # across the (sequential) row-block grid — the VMEM residency the
+    # planner budgets for
+    in_specs = [pl.BlockSpec((block_m, K0), lambda i: (i, 0))]
+    for w in weights:
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+    for t in thr_t:
+        in_specs.append(pl.BlockSpec(t.shape, lambda i: (0, 0)))
+
+    scratch = []
+    if n_stages > 1:
+        fifo_width = max(dims[:-1])
+        scratch = [pltpu.VMEM((block_m, fifo_width), jnp.int32),
+                   pltpu.VMEM((block_m, fifo_width), jnp.int32)]
+
+    return pl.pallas_call(
+        functools.partial(_mega_kernel, n_stages=n_stages,
+                          n_steps=tuple(int(t.shape[0]) for t in thr_t),
+                          out_dims=tuple(dims)),
+        grid=(M // block_m,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, dims[-1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, dims[-1]), jnp.int32),
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(
+            # sequential grid: consecutive row blocks reuse the resident
+            # weight/bank blocks instead of refetching them
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(x_int.astype(jnp.int32), *weights, *thr_t)
+
+
+def mlp_megakernel_ref(x_int, weights, banks) -> jnp.ndarray:
+    """Pure-jnp oracle: the same chain, stage by stage (order-free ints)."""
+    from repro.core.streamline import multi_threshold
+
+    h = jnp.asarray(x_int, jnp.int32)
+    for w, b in zip(weights, banks):
+        acc = jnp.matmul(h, jnp.asarray(w, jnp.int32))
+        h = multi_threshold(acc, jnp.asarray(b, jnp.int32))
+    return h

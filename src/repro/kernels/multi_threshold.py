@@ -11,6 +11,16 @@ Threshold layout: (C, S) is transposed to (S, C) before the kernel so the
 channel axis is the 128-lane minor axis — each of the S compare steps is a
 full-width (bm, C) vector op, and S (= 7 for 3-bit KWS, 255 worst-case) is
 the sequential loop.
+
+Deep banks (S >= ``DOUBLE_BUFFER_STEPS``) stream in slabs instead of
+pinning the whole (S, C) bank per program: the slab rides a second
+(sequential) grid dimension, so the Pallas pipeline's revolving block
+buffers prefetch the next slab's DMA behind the current slab's compare
+loop — the same grid-pipeline double-buffering the direct-conv kernel uses
+for its input bands — and only two slabs ever occupy VMEM. Banks are
+padded to a slab multiple with INT32_MAX rows (never reached by any
+accumulator inside the 2^24 exactness bound, the same trick
+``ops.threshold_matmul`` uses for padded channels), so the count is exact.
 """
 
 from __future__ import annotations
@@ -26,6 +36,15 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
 
+#: Banks at least this deep stream in double-buffered slabs instead of
+#: riding whole in VMEM (carried-over ROADMAP item: S >= 256).
+DOUBLE_BUFFER_STEPS = 256
+
+#: Slab height for the streamed bank (rows of the (S, C) transposed bank
+#: per grid step; multiple of the 8-row f32/int32 sublane tile).
+BANK_SLAB = 64
+
+
 def _mt_kernel(acc_ref, thr_ref, o_ref, *, n_steps: int):
     acc = acc_ref[...]                       # (bm, C) int32
     out = jnp.zeros_like(acc)
@@ -37,18 +56,68 @@ def _mt_kernel(acc_ref, thr_ref, o_ref, *, n_steps: int):
     o_ref[...] = jax.lax.fori_loop(0, n_steps, body, out)
 
 
+def _mt_slab_kernel(acc_ref, thr_ref, o_ref, *, slab: int):
+    """One bank slab's compares, accumulated into the revisited out block.
+
+    The slab grid dimension is sequential and the out block's index does
+    not depend on it, so the output stays resident across slab steps while
+    the pipeline prefetches slab s+1 behind slab s's compare loop.
+    """
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = acc_ref[...]                       # (bm, C) int32
+
+    def body(i, out):
+        t = jax.lax.dynamic_slice_in_dim(thr_ref[...], i, 1, axis=0)  # (1, C)
+        return out + (acc >= t).astype(jnp.int32)
+
+    o_ref[...] = jax.lax.fori_loop(0, slab, body, o_ref[...])
+
+
 def multi_threshold(acc: jnp.ndarray, thresholds: jnp.ndarray, *,
                     block_m: int = 256, interpret: bool = False) -> jnp.ndarray:
     """acc (M, C) int32, thresholds (C, S) int32 -> (M, C) int32 in [0, S].
 
     M must divide block_m (ops.multi_threshold pads); C rides whole in VMEM
-    (tiny-model channel counts: 12-512)."""
+    (tiny-model channel counts: 12-512). Banks with S < DOUBLE_BUFFER_STEPS
+    ride whole too; deeper banks stream in double-buffered BANK_SLAB slabs
+    (module docstring)."""
     M, C = acc.shape
     S = thresholds.shape[1]
     assert thresholds.shape[0] == C
     block_m = min(block_m, M)
     assert M % block_m == 0, (M, block_m)
     thr_t = thresholds.T.astype(jnp.int32)   # (S, C): lanes = channels
+
+    if S >= DOUBLE_BUFFER_STEPS:
+        pad = (-S) % BANK_SLAB
+        if pad:
+            # INT32_MAX rows count nothing: no in-bound accumulator reaches
+            # them (same padding contract as ops.threshold_matmul channels)
+            thr_t = jnp.concatenate(
+                [thr_t, jnp.full((pad, C), jnp.iinfo(jnp.int32).max,
+                                 jnp.int32)], axis=0)
+        n_slabs = thr_t.shape[0] // BANK_SLAB
+        return pl.pallas_call(
+            functools.partial(_mt_slab_kernel, slab=BANK_SLAB),
+            grid=(M // block_m, n_slabs),
+            in_specs=[
+                pl.BlockSpec((block_m, C), lambda i, s: (i, 0)),
+                pl.BlockSpec((BANK_SLAB, C), lambda i, s: (s, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_m, C), lambda i, s: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((M, C), jnp.int32),
+            compiler_params=_CompilerParams(
+                # slab dim sequential: the revolving buffers double-buffer
+                # the next slab fetch behind the current compare loop
+                dimension_semantics=("parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(acc, thr_t)
 
     return pl.pallas_call(
         functools.partial(_mt_kernel, n_steps=S),

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import conv_threshold as _ct
 from repro.kernels import flash_attention as _fa
+from repro.kernels import megakernel as _mk
 from repro.kernels import multi_threshold as _mt
 from repro.kernels import qmatmul as _qm
 from repro.kernels import ref
@@ -103,6 +104,27 @@ def threshold_matmul(x_int, w_int, thresholds, *, block_m=128, block_n=128,
     return y[:M0, :N0]
 
 
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def mlp_megakernel(x_int, weights, banks, *, block_m=128,
+                   interpret: Optional[bool] = None):
+    """Whole-MLP-segment megakernel (all stages in one Pallas program).
+
+    ``weights``/``banks`` are the per-stage ``ThresholdDense`` artifacts in
+    schedule order (tuples, so jit treats them as a pytree of operands).
+    Auto-pads the wave rows to the row block; padded rows are inert (their
+    codes are discarded). The whole chain runs on-chip: weights and banks
+    resident in VMEM, inter-stage activations in scratch tiles — see
+    ``kernels.megakernel`` and ``docs/megakernel.md``.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    M0 = x_int.shape[0]
+    bm = min(block_m, max(M0, 8))
+    x_p, _ = _pad_to(x_int.astype(jnp.int32), bm, 0)
+    y = _mk.mlp_megakernel(x_p, tuple(weights), tuple(banks),
+                           block_m=bm, interpret=interp)
+    return y[:M0]
+
+
 def plan_conv_blocks(out_h: int, out_w: int, out_ch: int,
                      target_rows: int = 256,
                      acc_budget_bytes: int = 1 << 21) -> int:
@@ -182,6 +204,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
 
 
 # re-export oracles for convenience
+mlp_megakernel_ref = _mk.mlp_megakernel_ref
 qmatmul_ref = ref.qmatmul_ref
 multi_threshold_ref = ref.multi_threshold_ref
 threshold_matmul_ref = ref.threshold_matmul_ref

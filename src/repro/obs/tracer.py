@@ -204,6 +204,12 @@ class Tracer:
         with self._lock:
             return len(self._events)
 
+    def __bool__(self) -> bool:
+        # without this, __len__ makes an *empty* tracer falsy and
+        # ``tracer or NULL_TRACER`` silently discards a fresh tracer
+        # before its first event; a real tracer is always truthy
+        return True
+
 
 class NullTracer:
     """The disabled tracer: every method is a no-op over shared singletons.
@@ -246,6 +252,12 @@ class NullTracer:
 
     def __len__(self) -> int:
         return 0
+
+    def __bool__(self) -> bool:
+        # deliberately falsy: the disabled tracer is the "no tracing"
+        # sentinel, so ``tracer or NULL_TRACER`` and enabled-style checks
+        # both treat it as absent
+        return False
 
 
 #: The shared default NullTracer instance.

@@ -263,6 +263,50 @@ def test_compile_graph_autotune_flag_and_env_knobs(tmp_path, monkeypatch):
     assert cm3.tuned == cm1.tuned
 
 
+def test_autotune_segment_mode_v3_persisted_and_bit_exact(tmp_path):
+    """v3 configs carry the megakernel/staged dispatch choice: on the MLP
+    the residency planner admits a fused run, deterministic probes tie,
+    and the traffic model breaks the tie toward the megakernel (it can
+    only save bytes). Applying the config flips the executor's dispatch
+    without changing any integers."""
+    cm = _mlp_compiled()
+    probe = _fixed_probe({mb: 0.005 for mb in (1, 2, 4, 8, 16, 32, 64)})
+    cfg = autotune_model(cm, batch=16, probe=probe,
+                         directory=str(tmp_path), force=True)
+    assert cfg.version == CONFIG_VERSION == 3
+    assert cfg.segment_mode == "megakernel"
+    m = cfg.segment_mode_model
+    assert m["plans"] and m["model_pick"] == "megakernel"
+    assert m["megakernel_bytes"] < m["staged_bytes"]
+    assert m["bytes_saved"] == m["staged_bytes"] - m["megakernel_bytes"]
+    assert m["probe_ms"]["megakernel"] == m["probe_ms"]["staged"]
+    assert cm.megakernel is None     # probing restored the pre-search mode
+    assert load_config(cfg.key, str(tmp_path)) == cfg
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(-127, 128, (6, 490)), jnp.int32)
+    y_auto = np.asarray(cm.offline(x))
+    cm.apply_tuned(cfg)
+    assert cm.megakernel is True and cm._mega_plans
+    np.testing.assert_array_equal(np.asarray(cm.offline(x)), y_auto)
+    # the explicit staged path agrees bit for bit (the reference)
+    cm.set_megakernel(False)
+    np.testing.assert_array_equal(np.asarray(cm.offline(x)), y_auto)
+
+
+def test_autotune_segment_mode_staged_when_planner_admits_nothing(tmp_path):
+    """The conv model has no fused dense run, so the choice degrades to
+    staged with an empty model record — and applying it is a no-op for
+    dispatch."""
+    cm = _conv_compiled()
+    probe = _fixed_probe({mb: 0.005 for mb in (1, 2, 4, 8, 16, 32, 64)})
+    cfg = autotune_model(cm, batch=16, probe=probe,
+                         directory=str(tmp_path), force=True)
+    assert cfg.segment_mode == "staged"
+    assert cfg.segment_mode_model == {}
+    cm.apply_tuned(cfg)
+    assert cm.megakernel is False and cm._mega_plans == {}
+
+
 def test_schedule_key_distinguishes_models():
     k1 = schedule_key(_mlp_compiled())
     k2 = schedule_key(_conv_compiled())

@@ -136,3 +136,70 @@ def test_golden_ic_pallas_kernel_path_bit_exact():
     outs = cm.stage_outputs(jnp.asarray(x[:2]))
     for i, (got, want) in enumerate(zip(outs, want_stages)):
         _assert_stage_match(got, want[:2], f"ic[pallas] stage {i}")
+
+
+# ---------------------------------------------------------------------------
+# megakernel dispatch: {staged, megakernel} x {offline, streaming, waves}
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ("kws", "ad"))
+@pytest.mark.parametrize("mode", ["staged", "megakernel"])
+def test_golden_mlp_dispatch_modes_bit_exact(name, mode):
+    """Both segment dispatch modes reproduce the frozen logits across every
+    executor entry point: the whole-network-resident megakernel
+    (``docs/megakernel.md``) is integer-exact against the per-stage path
+    because threshold counting is order-free."""
+    graph, x, want_stages = _load(name)
+    want = want_stages[-1]
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False, megakernel=(mode == "megakernel"))
+    if mode == "megakernel":
+        assert cm._mega_plans, f"{name}: planner admitted no megakernel run"
+    else:
+        assert not cm._mega_plans
+    xj = jnp.asarray(x)
+    _assert_stage_match(cm.offline(xj), want, f"{name}[{mode}] offline")
+    y_str, stats = cm.streaming_compiled(xj, micro_batch=2)
+    _assert_stage_match(y_str, want, f"{name}[{mode}] streaming_compiled")
+    assert bool(stats.megakernel) == (mode == "megakernel")
+    # submit_wave: a partially filled wave with an explicit valid mask —
+    # padding rows must not perturb the real queries
+    valid = np.array([True, False, True])
+    y_w, mask = cm.submit_wave(x[:3], valid=valid, micro_batch=4)
+    assert mask.tolist() == [True, False, True, False]
+    _assert_stage_match(np.asarray(y_w)[mask], want[:3][valid],
+                        f"{name}[{mode}] submit_wave")
+
+
+@pytest.mark.parametrize("name", ("kws", "ad"))
+def test_golden_mlp_megakernel_pallas_interpret_bit_exact(name):
+    """The actual Pallas megakernel program (interpret mode on CPU) — not
+    just the straight-line XLA fallback — reproduces the frozen integers."""
+    graph, x, want_stages = _load(name)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=True, interpret=True, megakernel=True)
+    assert cm._mega_plans
+    _assert_stage_match(cm.offline(jnp.asarray(x)), want_stages[-1],
+                        f"{name}[pallas-mega] offline")
+
+
+@pytest.mark.parametrize("name", ("kws", "ad"))
+def test_golden_mlp_megakernel_fallback_when_budget_rejects(name):
+    """Force-requesting the megakernel under a VMEM budget too small for
+    the segment's weights+banks+tiles falls back to the staged path — and
+    the outputs stay frozen-exact (the fallback IS the reference)."""
+    graph, x, want_stages = _load(name)
+    cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
+                       use_pallas=False, megakernel=True)
+    assert cm._mega_plans
+    cm.set_megakernel(True, budget_bytes=64)
+    assert cm._mega_plans == {}
+    xj = jnp.asarray(x)
+    _assert_stage_match(cm.offline(xj), want_stages[-1],
+                        f"{name}[fallback] offline")
+    y_str, stats = cm.streaming_compiled(xj, micro_batch=2)
+    _assert_stage_match(y_str, want_stages[-1], f"{name}[fallback] streaming")
+    assert not stats.megakernel
+    # restoring the default budget re-admits the plan
+    cm.set_megakernel(None)
+    assert cm._mega_plans

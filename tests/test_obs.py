@@ -201,14 +201,27 @@ def test_null_tracer_is_inert_and_shared():
 
 
 def test_router_keeps_an_empty_tracer_instance():
-    """Regression: ``Tracer`` defines ``__len__``, so an EMPTY tracer is
-    falsy — every injection point must test ``is not None``, or a fresh
-    tracer silently degrades to the NullTracer before its first event."""
+    """Regression: ``Tracer`` defines ``__len__``, which historically made
+    an EMPTY tracer falsy, so ``tracer or NULL_TRACER`` silently degraded
+    a fresh tracer to the NullTracer before its first event. Fixed by an
+    explicit ``__bool__``; injection points testing ``is not None`` were
+    always safe."""
     ck = ManualClock()
     tr = Tracer(clock=ck)
     router = Router({"m": ScriptedModel(ck)}, RouterConfig(),
                     clock=ck, tracer=tr)
     assert router.tracer is tr
+
+
+def test_empty_tracer_is_truthy_null_tracer_is_falsy():
+    """The ``__bool__`` fix: a real tracer is truthy even before its first
+    event (``len() == 0``), while the disabled NullTracer stays falsy —
+    so both injection idioms now keep a fresh tracer."""
+    tr = Tracer(clock=ManualClock())
+    assert len(tr) == 0 and bool(tr)
+    assert (tr or NULL_TRACER) is tr
+    assert not bool(NULL_TRACER)
+    assert (NULL_TRACER or tr) is tr
 
 
 # ---------------------------------------------------------------------------
