@@ -1,5 +1,6 @@
 .PHONY: test test-fast bench bench-table6 bench-scenarios bench-serve \
-	bench-obs trace-demo lint lint-clock lint-residency example
+	bench-scaling bench-obs trace-demo lint lint-clock lint-residency \
+	example
 
 test:            ## full tier-1 suite
 	./scripts/test.sh
@@ -18,6 +19,9 @@ bench-scenarios: ## scenario sweep, standalone (REPRO_FAST=1 for a quick pass)
 
 bench-serve:     ## serving throughput-at-SLO curves over the dynamic batcher
 	PYTHONPATH=src:. REPRO_FAST=$(REPRO_FAST) python benchmarks/serve_bench.py
+
+bench-scaling:   ## throughput-at-SLO vs replica count (simulated pool)
+	PYTHONPATH=src:. REPRO_FAST=$(REPRO_FAST) python benchmarks/serve_bench.py --scaling
 
 bench-obs:       ## NullTracer overhead assert + FIFO prediction-error table
 	PYTHONPATH=src:. REPRO_FAST=$(REPRO_FAST) python benchmarks/obs_bench.py

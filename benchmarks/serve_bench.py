@@ -17,11 +17,24 @@ number a capacity planner would quote. Everything lands machine-readable
 in ``BENCH_serving.json`` (``REPRO_BENCH_DIR``) next to the scenario and
 kernel artifacts so the serving trajectory is tracked across PRs.
 
+The **replica-scaling sweep** answers the scale-out question the single
+replica curves cannot: how does throughput-at-SLO grow with replica
+count? The container exposes one physical device, so the sweep is a
+discrete-event simulation — ``repro.serve.sim.ScriptedWaveModel`` fakes
+under a ``ManualClock``, with each fake's wave service time anchored to
+the family's *measured* wave service on the real compiled model. The
+async engine overlaps waves across the pool (throughput scales with N);
+the sync engine rows show the blocking router's one-wave-at-a-time
+ceiling that PR 8 removed. Standalone: ``python -m benchmarks.serve_bench
+--scaling`` (emits ``BENCH_serving_scaling.json``); the full run embeds
+the same sweep under the ``"scaling"`` key of ``BENCH_serving.json``.
+
 Set REPRO_FAST=1 for a reduced-size pass (CI / smoke).
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 
 import jax
@@ -33,10 +46,17 @@ from repro.deploy.autotune import autotune_model
 from repro.deploy.scenarios import server_streaming
 from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
 from repro.serve import (
+    AsyncEngine,
+    ManualClock,
+    Router,
+    RouterConfig,
     ServiceModel,
+    SyncEngine,
     measure_wave_service_s,
+    poisson_trace,
     slo_operating_point,
 )
+from repro.serve.sim import scripted_pool
 
 FAST = os.environ.get("REPRO_FAST", "0") not in ("0", "")
 
@@ -45,6 +65,22 @@ LOAD_FRACTIONS = (0.7, 1.1) if FAST else (0.3, 0.5, 0.7, 0.9, 1.1)
 
 #: Shed-rate ceiling for a load point to count as "inside SLO".
 SHED_CEILING = 0.01
+
+#: Replica counts for the scaling sweep.
+SCALING_REPLICAS = (1, 2, 4)
+
+#: Scaling-sweep load fractions of the *aggregate* (replicas x per-replica
+#: saturation) throughput — lower than LOAD_FRACTIONS because the sync
+#: contrast rows need sub-ceiling points to land a valid operating point.
+#: Not reduced under FAST: the sweep is a pure event loop, and a coarse
+#: fraction grid makes the operating point (and the 1->2 scaling ratio)
+#: a lottery on whichever single point survives the SLO filter.
+SCALING_FRACTIONS = (0.25, 0.4, 0.6, 0.7, 0.8, 0.95)
+
+#: Queries per scaling simulation point (pure event loop — cheap).
+#: ``bench_scaling`` raises this to 40 waves' worth when the tuned wave
+#: is large, so the p99 of a point never rests on a handful of waves.
+SCALING_QUERIES = 160 if FAST else 400
 
 
 def _budget_ms(service: ServiceModel, micro_batch: int) -> float:
@@ -126,6 +162,7 @@ def bench_model(name: str, cm, mk, n_queries: int):
         "p99_budget_ms": budget,
         "max_wait_ms": max_wait_ms,
         "measured_saturation_qps": sat_qps,
+        "wave_service_ms": service.wave_service_s(mb) * 1e3,
         "service_calibration": service.calibration,
         "slo_candidates": point["candidates"],
         "curve": curve,
@@ -133,12 +170,98 @@ def bench_model(name: str, cm, mk, n_queries: int):
     }
 
 
-def run():
-    banner("Serving: throughput-at-SLO over the dynamic-batching router")
-    key = jax.random.PRNGKey(0)
-    rng = np.random.default_rng(0)
-    n_queries = 48 if FAST else 128
+# ---------------------------------------------------------------------------
+# replica-scaling sweep (discrete-event simulation, measured service anchor)
+# ---------------------------------------------------------------------------
 
+def _scaling_service_model(service_s: float, mb: int) -> ServiceModel:
+    """One-stage ServiceModel calibrated so ``wave_service_s(mb)`` equals
+    ``service_s`` exactly — the scripted lane gets the same admission and
+    placement arithmetic a probe-calibrated real model would."""
+    model = ServiceModel(works=[("s", 0)], sec_per_cycle=1.0)
+    model.sec_per_cycle = service_s / max(model.wave_cycles(mb), 1)
+    return model
+
+
+def _scaling_point(service_s: float, mb: int, n_replicas: int, engine_cls,
+                   frac: float, budget_ms: float, max_wait_ms: float,
+                   n_queries: int, seed: int):
+    """One simulated load point: ``n_replicas`` scripted replicas (each a
+    hand-checkable ``service_s``-per-wave device), Poisson arrivals at
+    ``frac`` of the pool's aggregate saturation, full router in the loop
+    (admission, deadline batching, placement, reaping)."""
+    clock = ManualClock()
+    pool = scripted_pool(clock, [service_s] * n_replicas, micro_batch=mb)
+    router = Router(
+        {"m": pool},
+        RouterConfig(max_wait_ms=max_wait_ms, micro_batch=mb,
+                     p99_budget_ms=budget_ms),
+        clock=clock,
+        service_models={"m": _scaling_service_model(service_s, mb)},
+        engine=engine_cls())
+    offered = frac * n_replicas * (mb / service_s)
+    trace = poisson_trace(qps=offered, n=n_queries, seed=seed)
+    reqs = router.run_trace(
+        "m", trace, lambda i: np.full((2,), i % 128, np.int32))
+    served = [r for r in reqs if not r.shed]
+    lats_ms = np.asarray([r.latency_s for r in served]) * 1e3
+    span = (max(r.done_t for r in served)
+            - min(r.arrival_t for r in served)) if served else 0.0
+    p99 = float(np.percentile(lats_ms, 99)) if served else float("inf")
+    return {
+        "load_fraction": frac,
+        "offered_qps": offered,
+        "achieved_qps": len(served) / max(span, 1e-12),
+        "p99_ms": p99,
+        "shed_rate": 1.0 - len(served) / len(reqs),
+        "met_slo": bool(served) and p99 <= budget_ms,
+    }
+
+
+def bench_scaling(name: str, service_s: float, mb: int,
+                  n_queries: int = SCALING_QUERIES):
+    """Throughput-at-p99-SLO vs replica count for one model family, async
+    vs sync engine. ``service_s`` is the family's measured wave service
+    time on the real compiled model — the simulation's only free
+    parameter, so the sweep isolates engine scheduling from device count.
+    """
+    budget_ms = max(10.0, 6.0 * service_s * 1e3)
+    max_wait_ms = max(2.0, 1.5 * service_s * 1e3)
+    n_queries = max(n_queries, 40 * mb)
+    out = {"wave_service_ms": service_s * 1e3, "micro_batch": mb,
+           "p99_budget_ms": budget_ms, "max_wait_ms": max_wait_ms,
+           "replica_counts": list(SCALING_REPLICAS),
+           "load_fractions": list(SCALING_FRACTIONS),
+           "n_queries": n_queries, "engines": {}}
+    for engine_name, engine_cls in (("async", AsyncEngine),
+                                    ("sync", SyncEngine)):
+        per_n = {}
+        for n in SCALING_REPLICAS:
+            curve = [
+                _scaling_point(
+                    service_s, mb, n, engine_cls, frac, budget_ms,
+                    max_wait_ms, n_queries,
+                    seed=10_000 * n + int(frac * 1000)
+                    + (5_000 if engine_cls is SyncEngine else 0))
+                for frac in SCALING_FRACTIONS]
+            inside = [c for c in curve
+                      if c["met_slo"] and c["shed_rate"] < SHED_CEILING]
+            per_n[str(n)] = {
+                "curve": curve,
+                "qps_at_slo": (max(c["achieved_qps"] for c in inside)
+                               if inside else None),
+            }
+        out["engines"][engine_name] = per_n
+    a = out["engines"]["async"]
+    base = a["1"]["qps_at_slo"]
+    if base:
+        for n in SCALING_REPLICAS[1:]:
+            qn = a[str(n)]["qps_at_slo"] or 0.0
+            out[f"scaling_1_to_{n}"] = qn / base
+    return out
+
+
+def _build_entries(key, rng):
     entries = {}
     kws, ad = KWSMLP(), ADAutoencoder()
     for name, model, dim in (("KWS-FINN", kws, 490), ("AD-hls4ml", ad, 128)):
@@ -152,14 +275,68 @@ def run():
         mk = (lambda h, c: lambda i: rng.integers(
             -127, 128, (h, h, c)).astype(np.int32))(hw, ch)
         entries[name] = (cm, mk)
+    return entries
+
+
+def _scaling_rows(name: str, sc) -> list:
+    """Printable summary rows for one family's scaling sweep."""
+    a = sc["engines"]["async"]
+    s = sc["engines"]["sync"]
+
+    def q(tab, n):
+        v = tab[str(n)]["qps_at_slo"]
+        return "-" if v is None else f"{v:.0f}"
+
+    return [row(
+        f"serve/{name}/scaling", 0.0,
+        wave_ms=f"{sc['wave_service_ms']:.3f}",
+        micro_batch=sc["micro_batch"],
+        async_qps_1=q(a, 1), async_qps_2=q(a, 2), async_qps_4=q(a, 4),
+        sync_qps_2=q(s, 2),
+        x_1_to_2=(f"{sc['scaling_1_to_2']:.2f}"
+                  if "scaling_1_to_2" in sc else "-"),
+        x_1_to_4=(f"{sc['scaling_1_to_4']:.2f}"
+                  if "scaling_1_to_4" in sc else "-"))]
+
+
+def run_scaling_only():
+    """Standalone replica-scaling sweep: autotune each family, measure its
+    real wave service time, and run the discrete-event sweep from that
+    anchor — skipping the full load-curve bench."""
+    banner("Serving: replica scaling (simulated pool, measured service)")
+    entries = _build_entries(jax.random.PRNGKey(0), np.random.default_rng(0))
+    rows = []
+    doc = {"fast": FAST, "models": {}}
+    for name, (cm, mk) in entries.items():
+        cfg = autotune_model(cm, batch=32 if FAST else 64)
+        cm.apply_tuned(cfg)
+        mb = cm.default_micro_batch
+        sc = bench_scaling(name, measure_wave_service_s(cm, mb), mb)
+        doc["models"][name] = sc
+        rows.extend(_scaling_rows(name, sc))
+    print_rows(rows)
+    emit_json("BENCH_serving_scaling.json", doc)
+    return rows
+
+
+def run():
+    banner("Serving: throughput-at-SLO over the dynamic-batching router")
+    n_queries = 48 if FAST else 128
+    entries = _build_entries(jax.random.PRNGKey(0), np.random.default_rng(0))
 
     rows = []
-    doc = {"models": {}, "fast": FAST,
+    doc = {"models": {}, "scaling": {}, "fast": FAST,
            "load_fractions": list(LOAD_FRACTIONS),
            "shed_ceiling": SHED_CEILING}
     for name, (cm, mk) in entries.items():
         res = bench_model(name, cm, mk, n_queries)
         doc["models"][name] = res
+        # replica-scaling sweep anchored to this family's measured wave
+        # service (pinned to the saturation probe above)
+        sc = bench_scaling(name, res["wave_service_ms"] / 1e3,
+                           res["micro_batch"])
+        doc["scaling"][name] = sc
+        rows.extend(_scaling_rows(name, sc))
         for c in res["curve"]:
             rows.append(row(
                 f"serve/{name}/load{c['load_fraction']:.1f}",
@@ -187,4 +364,11 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scaling", action="store_true",
+                    help="run only the replica-scaling sweep "
+                         "(emits BENCH_serving_scaling.json)")
+    if ap.parse_args().scaling:
+        run_scaling_only()
+    else:
+        run()

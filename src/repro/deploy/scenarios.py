@@ -279,7 +279,7 @@ def server_streaming(compiled, make_query: Callable[[int], np.ndarray],
                      micro_batch: Optional[int] = None,
                      service_model=None, warmup: int = 1,
                      model_cost=None, bits: int = 8,
-                     tracer=None) -> ScenarioReport:
+                     tracer=None, engine=None) -> ScenarioReport:
     """MLPerf Server mode over the dynamic-batching serve router.
 
     Where ``server_poisson`` serves each arrival alone (batch 1, one
@@ -325,7 +325,7 @@ def server_streaming(compiled, make_query: Callable[[int], np.ndarray],
     router = Router({"m": compiled}, cfg, clock=_Clock(),
                     service_models=(None if service_model is None
                                     else {"m": service_model}),
-                    tracer=tracer)
+                    tracer=tracer, engine=engine)
     trace = poisson_trace(qps=qps, n=n_queries, seed=seed)
     reqs = router.run_trace("m", trace, lambda i: queries[i])
     served = [r for r in reqs if not r.shed]

@@ -1,8 +1,14 @@
 """Serving launcher: continuous-batching engine with optional int8 deployment
-quantization — the paper's streamlined-deployment path for the LM archs.
+quantization — the paper's streamlined-deployment path for the LM archs —
+plus the tiny-model stack behind ``--stack tiny``: a compiled Table-1 model
+served through the ``repro.serve`` router with a replica pool and a
+selectable dispatch engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --requests 16 --quant-bits 8
+
+    PYTHONPATH=src python -m repro.launch.serve --stack tiny \
+        --tiny-model kws --replicas 2 --engine async --requests 256
 """
 
 import argparse
@@ -22,8 +28,82 @@ logging.basicConfig(level=logging.INFO, format="%(message)s")
 log = logging.getLogger("repro.launch.serve")
 
 
+def _run_tiny(args):
+    """Compile one tiny model, spread it over ``--replicas`` pool slots
+    (one physical CPU device — the pool is logical, the dispatch overlap
+    real via JAX async dispatch), and drive a Poisson trace through the
+    router under the chosen engine."""
+    from repro.core.qir import export_qmlp
+    from repro.deploy import compile_graph
+    from repro.deploy.autotune import autotune_model
+    from repro.models.tiny import ADAutoencoder, KWSMLP
+    from repro.serve import (
+        AsyncEngine,
+        ReplicaPool,
+        Router,
+        RouterConfig,
+        ServiceModel,
+        SyncEngine,
+        measure_wave_service_s,
+        poisson_trace,
+    )
+
+    in_scale = 1.0 / 127.0
+    model, dim = ((KWSMLP(), 490) if args.tiny_model == "kws"
+                  else (ADAutoencoder(), 128))
+    params = model.init(jax.random.PRNGKey(0))
+    hidden_defs, _ = model.layers()
+    graph = export_qmlp(hidden_defs, params["hidden"], params["head"],
+                        meta={"model": type(model).__name__},
+                        freeze_scales=True, in_scale=in_scale)
+    cm = compile_graph(graph, in_scale=in_scale, use_pallas=False)
+    cm.apply_tuned(autotune_model(cm, batch=32))
+    mb = cm.default_micro_batch
+    service = ServiceModel.from_compiled(cm, probe_batch=mb).recalibrated(
+        measure_wave_service_s(cm, mb), mb)
+    engine = AsyncEngine() if args.engine == "async" else SyncEngine()
+
+    # every replica slot shares the one compiled executor: submit_wave is
+    # stateless, so N slots = N logical devices on the single CPU
+    pool = ReplicaPool(factory=lambda: cm, devices=[None] * args.replicas)
+    router = Router({args.tiny_model: pool},
+                    RouterConfig(micro_batch=mb),
+                    service_models={args.tiny_model: service},
+                    engine=engine)
+    rng = np.random.default_rng(args.seed)
+    qps = args.qps or 0.5 * args.replicas * service.saturation_qps(mb)
+    trace = poisson_trace(qps=qps, n=args.requests, seed=args.seed)
+    t0 = obs_timer.now()
+    reqs = router.run_trace(
+        args.tiny_model, trace,
+        lambda i: rng.integers(-127, 128, (dim,)).astype(np.int32))
+    dt = obs_timer.now() - t0
+    served = [r for r in reqs if not r.shed]
+    lats_ms = np.asarray([r.latency_s for r in served]) * 1e3
+    snap = router.stats()[args.tiny_model]["metrics"]
+    log.info("tiny stack: %s x%d replicas, %s engine, wave=%d",
+             args.tiny_model, args.replicas, args.engine, mb)
+    log.info("offered %.0f qps | served %d/%d in %.2fs (%.0f qps)",
+             qps, len(served), len(reqs), dt, len(served) / max(dt, 1e-9))
+    log.info("p50 %.2f ms | p99 %.2f ms | wave p50 %.2f ms | occupancy %.2f",
+             float(np.percentile(lats_ms, 50)),
+             float(np.percentile(lats_ms, 99)),
+             snap.wave_service_p50_ms, snap.mean_occupancy)
+    return {"served": len(served), "n": len(reqs),
+            "p99_ms": float(np.percentile(lats_ms, 99)),
+            "throughput_qps": len(served) / max(dt, 1e-9)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--stack", choices=("lm", "tiny"), default="lm",
+                    help="lm: continuous-batching ServeEngine; tiny: "
+                         "compiled Table-1 model through the serve router")
+    ap.add_argument("--tiny-model", choices=("kws", "ad"), default="kws")
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--engine", choices=("sync", "async"), default="sync")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="offered load; 0 = half the pool's saturation")
     ap.add_argument("--arch", choices=ARCH_IDS, default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=16)
@@ -33,6 +113,9 @@ def main(argv=None):
     ap.add_argument("--quant-bits", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.stack == "tiny":
+        return _run_tiny(args)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -5,7 +5,11 @@ The layer between request traffic and the compiled streaming pipeline
 requests into padded micro-batch waves and dispatches them through the
 executor's compiled segment programs (``CompiledTinyModel.submit_wave``),
 a replica pool (``replica``) places waves across devices by least
-outstanding work, an admission controller (``slo``) sheds load before the
+outstanding work, an injectable dispatch engine (``dispatch``) decides
+whether waves block in the submit path (``SyncEngine`` — the exact
+discrete-event default) or overlap across replicas through an in-flight
+table (``AsyncEngine`` — JAX async dispatch, completions reaped by the
+event loop), an admission controller (``slo``) sheds load before the
 p99 budget blows using the FIFO cost model calibrated by measured stage
 latencies, traffic generators (``traffic``) produce seedable
 Poisson/bursty/diurnal/replay arrival traces, and sliding-window metrics
@@ -20,6 +24,12 @@ so the whole server is a deterministic discrete-event system under
 """
 
 from repro.serve.clock import ManualClock, SystemClock  # noqa: F401
+from repro.serve.dispatch import (  # noqa: F401
+    AsyncEngine,
+    DispatchEngine,
+    SyncEngine,
+    WaveHandle,
+)
 from repro.serve.metrics import (  # noqa: F401
     MetricsSnapshot,
     ServeMetrics,
@@ -34,6 +44,7 @@ from repro.serve.slo import (  # noqa: F401
     ServiceModel,
     SLOController,
     measure_wave_service_s,
+    queued_waves,
     slo_operating_point,
 )
 from repro.serve.traffic import (  # noqa: F401

@@ -39,6 +39,10 @@ class MetricsSnapshot:
     n_waves: int
     mean_occupancy: float                 # mean n_valid / micro_batch
     occupancy_hist: Dict[int, int]        # n_valid -> wave count
+    #: median measured wave service time (submit -> completion) across the
+    #: window's waves; 0.0 when no wave carried a measurement. The number
+    #: the lane's EWMA placement estimate converges to.
+    wave_service_p50_ms: float = 0.0
 
     def row(self) -> Dict[str, object]:
         return {
@@ -49,6 +53,7 @@ class MetricsSnapshot:
             "shed_rate": round(self.shed_rate, 4),
             "waves": self.n_waves,
             "occupancy": round(self.mean_occupancy, 3),
+            "wave_service_p50_ms": round(self.wave_service_p50_ms, 4),
         }
 
 
@@ -65,7 +70,9 @@ class ServeMetrics:
         self._completions: Deque[Tuple[float, float]] = collections.deque()
         self._admits: Deque[float] = collections.deque()
         self._sheds: Deque[float] = collections.deque()
-        self._waves: Deque[Tuple[float, int, int]] = collections.deque()
+        #: (t, n_valid, micro_batch, service_s or None) per dispatched wave
+        self._waves: Deque[Tuple[float, int, int, Optional[float]]] = \
+            collections.deque()
 
     def _mark(self, now: float) -> None:
         if self.first_event_t is None:
@@ -84,9 +91,14 @@ class ServeMetrics:
         self._mark(now)
         self._completions.append((now, latency_s))
 
-    def record_wave(self, now: float, n_valid: int, micro_batch: int) -> None:
+    def record_wave(self, now: float, n_valid: int, micro_batch: int,
+                    service_s: Optional[float] = None) -> None:
+        """One dispatched wave; ``service_s`` is its measured submit ->
+        completion time when the caller settles completions (the router's
+        completion callback does; legacy callers may omit it)."""
         self._mark(now)
-        self._waves.append((now, int(n_valid), int(micro_batch)))
+        self._waves.append((now, int(n_valid), int(micro_batch),
+                            None if service_s is None else float(service_s)))
 
     # -- window accounting -------------------------------------------------
     def _prune(self, now: float) -> None:
@@ -128,9 +140,14 @@ class ServeMetrics:
         offered = len(self._admits) + len(self._sheds)
         hist: Dict[int, int] = {}
         occ = 0.0
-        for _, n_valid, mb in self._waves:
+        services = []
+        for _, n_valid, mb, service_s in self._waves:
             hist[n_valid] = hist.get(n_valid, 0) + 1
             occ += n_valid / max(mb, 1)
+            if service_s is not None:
+                services.append(service_s)
+        wave_p50 = (float(np.percentile(np.asarray(services) * 1e3, 50))
+                    if services else 0.0)
         return MetricsSnapshot(
             window_s=self.window_s,
             n_completed=len(self._completions),
@@ -142,4 +159,5 @@ class ServeMetrics:
             n_waves=len(self._waves),
             mean_occupancy=occ / len(self._waves) if self._waves else 0.0,
             occupancy_hist=hist,
+            wave_service_p50_ms=wave_p50,
         )

@@ -8,9 +8,16 @@ device, and the pool places each wave on the replica with the least
 outstanding modeled work — the queueing-theory argument for
 join-shortest-queue over round-robin under heterogeneous wave sizes.
 
+Wave execution is split into ``submit`` (``device_put`` + ``submit_wave``;
+JAX's async dispatch makes the returned arrays promises, so this does not
+block) and the returned ``WaveHandle``'s ``wait`` — the seam the dispatch
+engines (``serve.dispatch``) are built on. ``run_wave`` remains as the
+blocking submit-then-wait composition.
+
 On the CPU container there is exactly one device; the pool degenerates to
-a single replica and the placement logic is exercised by the tests through
-fake executors.
+a single replica and the placement/overlap logic is exercised by the
+tests through fake executors (a fake exposing ``submit_wave_async`` can
+script completion times against a manual clock).
 """
 
 from __future__ import annotations
@@ -22,6 +29,7 @@ import jax
 import numpy as np
 
 from repro.obs.tracer import NULL_TRACER
+from repro.serve.dispatch import WaveHandle
 
 
 @dataclasses.dataclass
@@ -33,15 +41,33 @@ class Replica:
     device: Optional[object] = None
     outstanding_s: float = 0.0    # modeled seconds of work placed, not done
     n_dispatched: int = 0
+    n_inflight: int = 0           # waves submitted, not yet reaped
 
-    def run_wave(self, x, valid=None, micro_batch: Optional[int] = None):
-        """Run one padded wave on this replica's device; blocks until the
-        result is ready so the caller's clock reading is the completion."""
+    def submit(self, x, valid=None, micro_batch: Optional[int] = None
+               ) -> WaveHandle:
+        """Launch one padded wave on this replica's device without waiting
+        for the result.
+
+        Prefers the model's ``submit_wave_async`` when it has one (the
+        scripted-fake protocol: returns an object with ``ready_t`` and
+        ``wait()``); otherwise calls ``submit_wave`` directly — under JAX
+        async dispatch that call returns unmaterialized device arrays, so
+        the wave is in flight, not done, until the handle's ``wait``.
+        """
         if self.device is not None:
             x = jax.device_put(np.asarray(x), self.device)
+        submit_async = getattr(self.model, "submit_wave_async", None)
+        if submit_async is not None:
+            inner = submit_async(x, valid=valid, micro_batch=micro_batch)
+            return WaveHandle(self, inner=inner)
         y, mask = self.model.submit_wave(x, valid=valid,
                                          micro_batch=micro_batch)
-        return jax.block_until_ready(y), mask
+        return WaveHandle(self, y=y, mask=mask)
+
+    def run_wave(self, x, valid=None, micro_batch: Optional[int] = None):
+        """Run one padded wave and block until the result is ready, so the
+        caller's clock reading is the completion (the sync-engine path)."""
+        return self.submit(x, valid=valid, micro_batch=micro_batch).wait()
 
 
 class ReplicaPool:
@@ -89,7 +115,14 @@ class ReplicaPool:
         """Pick the least-outstanding-work replica and charge it the wave's
         modeled service time; ``complete`` credits it back. Equal-work ties
         break to the replica that has dispatched fewest waves (round-robin
-        under uniform load), then to index."""
+        under uniform load), then to index.
+
+        The caller owes a *real* ``work_s`` estimate for join-shortest-queue
+        to mean anything: with ``work_s=0`` every replica always ties and
+        placement silently degenerates to dispatch-count round-robin —
+        the bug the router's lane-level service estimate now closes even
+        when SLO shedding is off.
+        """
         r = min(self.replicas,
                 key=lambda r: (r.outstanding_s, r.n_dispatched, r.index))
         r.outstanding_s += float(work_s)
@@ -110,5 +143,6 @@ class ReplicaPool:
         return [{"replica": r.index,
                  "device": str(r.device) if r.device is not None else "local",
                  "dispatched": r.n_dispatched,
+                 "inflight": r.n_inflight,
                  "outstanding_s": r.outstanding_s}
                 for r in self.replicas]

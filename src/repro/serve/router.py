@@ -14,16 +14,27 @@ pending queue and two dispatch triggers:
 
 Waves are placed on a ``ReplicaPool`` by least outstanding work, and an
 optional ``SLOController`` sheds arrivals whose estimated completion
-would blow the per-model p99 budget. All timing goes through an
-injectable clock, so the router is an exact discrete-event system under
-``ManualClock`` — the property the hand-simulated-trace tests exploit —
-and a real server under ``SystemClock``.
+would blow the per-model p99 budget. *How* a placed wave executes is the
+injectable ``DispatchEngine``'s business (``serve.dispatch``): the
+default ``SyncEngine`` blocks inside dispatch (the original semantics),
+while ``AsyncEngine`` submits without waiting — the router parks a
+``WaveHandle`` per wave in its in-flight table and **reaps** completions
+on every event-loop pass, so waves on different replicas overlap and an
+N-replica pool finally runs N wide. Completion bookkeeping (result
+stamping, metrics, SLO feedback, pool credit, trace spans) lives in one
+place — ``_complete`` — for both engines.
+
+All timing goes through an injectable clock, so the router is an exact
+discrete-event system under ``ManualClock`` — the property the
+hand-simulated-trace tests exploit — and a real server under
+``SystemClock``.
 
 Typical use (the ``ServerStreaming`` scenario, the serve bench, and the
 ``TinyModelServer`` compatibility shim are all thin wrappers over this):
 
     router = Router({"ic": cm}, RouterConfig(max_wait_ms=2.0,
-                                             p99_budget_ms=50.0))
+                                             p99_budget_ms=50.0),
+                    engine=AsyncEngine())
     done = router.run_trace("ic", poisson_trace(qps, n), make_query)
     print(router.stats()["ic"]["metrics"])
 """
@@ -38,10 +49,18 @@ import numpy as np
 
 from repro.obs.tracer import NULL_TRACER
 from repro.serve.clock import SystemClock
+from repro.serve.dispatch import DispatchEngine, SyncEngine, WaveHandle
 from repro.serve.metrics import ServeMetrics
-from repro.serve.replica import ReplicaPool
-from repro.serve.slo import ServiceModel, SLOController
+from repro.serve.replica import Replica, ReplicaPool
+from repro.serve.slo import ServiceModel, SLOController, queued_waves
 from repro.serve.traffic import Trace
+
+#: Sleep bound while waves with unannounced completion times are in
+#: flight (real devices under ``SystemClock``): the event loop wakes at
+#: least this often to reap, so completion stamping lags the device by at
+#: most one poll. Scripted handles announce ``ready_t`` and never poll —
+#: manual-clock runs stay exact discrete-event simulations.
+_POLL_S = 0.5e-3
 
 
 def _backend_name() -> str:
@@ -96,6 +115,10 @@ class RouterConfig:
 class _Lane:
     """Internal per-model state: pool + queue + policy + metrics."""
 
+    #: EWMA weight for the measured-wave-time fallback service estimate
+    #: (same spirit as ``SLOController.ewma_alpha``).
+    EWMA_ALPHA = 0.25
+
     def __init__(self, name: str, pool: ReplicaPool, cfg: RouterConfig,
                  slo: Optional[SLOController], start_t: float,
                  service: Optional[ServiceModel] = None, tid: int = 0):
@@ -109,6 +132,10 @@ class _Lane:
         self.service = service
         self.tid = tid                       # trace track for this lane
         self.n_shed = 0
+        self.n_inflight = 0                  # this lane's unreaped waves
+        #: measured-wave-time EWMA: the placement work estimate of last
+        #: resort when the lane has neither controller nor service model
+        self.ewma_service_s: Optional[float] = None
         self.pending: Deque[ServeRequest] = collections.deque()
         self.metrics = ServeMetrics(window_s=cfg.window_s, start_t=start_t)
         self.micro_batch = int(cfg.micro_batch
@@ -118,6 +145,53 @@ class _Lane:
         if not self.pending:
             return None
         return self.pending[0].arrival_t + self.cfg.max_wait_ms / 1e3
+
+    def work_estimate_s(self) -> float:
+        """The wave service estimate placement charges a replica.
+
+        Best available source wins: the SLO controller's EWMA-corrected
+        model, else the raw lane service model, else the measured-wave
+        EWMA. Never 0.0 once anything has been observed — with a zero
+        charge every replica ties on outstanding work and least-work
+        placement silently degenerates to dispatch-count round-robin,
+        which misplaces heterogeneous waves.
+        """
+        if self.slo is not None:
+            return self.slo.wave_service_s(self.micro_batch)
+        if self.service is not None:
+            return self.service.wave_service_s(self.micro_batch)
+        return self.ewma_service_s if self.ewma_service_s is not None \
+            else 0.0
+
+    def observe_service(self, measured_s: float) -> None:
+        """Feed one completed wave's measured service time back into the
+        lane's estimate (controller EWMA when present, lane EWMA else)."""
+        if self.slo is not None:
+            self.slo.observe_service(self.micro_batch, measured_s)
+            return
+        if measured_s <= 0:
+            return
+        if self.ewma_service_s is None:
+            self.ewma_service_s = float(measured_s)
+        else:
+            a = self.EWMA_ALPHA
+            self.ewma_service_s = \
+                (1 - a) * self.ewma_service_s + a * float(measured_s)
+
+
+@dataclasses.dataclass
+class _InFlightWave:
+    """One dispatched wave between submit and completion — the in-flight
+    table's row (sync waves pass through without ever being parked)."""
+
+    lane: _Lane
+    reqs: List[ServeRequest]
+    replica: Replica
+    handle: WaveHandle
+    t0: float                    # submit time (span start, service clock)
+    work_s: float                # modeled work charged at placement
+    n_valid: int
+    seq: int                     # submission order: FIFO reap tiebreak
 
 
 class Router:
@@ -129,7 +203,9 @@ class Router:
     a per-model dict. ``service_models`` supplies the SLO service-time
     model per name; when omitted and a p99 budget is set, it is built from
     the compiled schedule (``ServiceModel.from_compiled`` — FIFO cost
-    model calibrated by a ``stage_latencies`` probe).
+    model calibrated by a ``stage_latencies`` probe). ``engine`` picks the
+    dispatch semantics (default ``SyncEngine``; pass ``AsyncEngine()`` to
+    overlap waves across replicas).
     """
 
     def __init__(self, models: Dict[str, object],
@@ -137,11 +213,15 @@ class Router:
                  = None,
                  clock: Optional[object] = None,
                  service_models: Optional[Dict[str, ServiceModel]] = None,
-                 tracer: Optional[object] = None):
+                 tracer: Optional[object] = None,
+                 engine: Optional[DispatchEngine] = None):
         self.clock = clock if clock is not None else SystemClock()
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.engine = engine if engine is not None else SyncEngine()
         self.platform = _backend_name() if self.tracer.enabled else ""
         self._uid = 0
+        self._wave_seq = 0
+        self._inflight: List[_InFlightWave] = []
         self.lanes: Dict[str, _Lane] = {}
         now = self.clock.now()
         for i, (name, model) in enumerate(models.items()):
@@ -191,7 +271,12 @@ class Router:
                        uid=req.uid, model=model)
         if lane.slo is not None:
             lane.slo.observe_arrival(now)
-            backlog_waves = len(lane.pending) // lane.micro_batch
+            # waves this request must wait out: the ceiling form prices
+            # the partial wave it joins, and every still-in-flight wave
+            # holds a replica slot so it is queue delay too (zero under
+            # the blocking engine, where dispatch and completion coincide)
+            backlog_waves = queued_waves(len(lane.pending),
+                                         lane.micro_batch, lane.n_inflight)
             # a request admitted late (the server was busy past its arrival
             # time) has already burned budget: the admission estimate must
             # carry that lag, or an overloaded single-worker lane would
@@ -199,7 +284,8 @@ class Router:
             # falls behind the trace
             lag_s = max(self.clock.now() - now, 0.0)
             if not lane.slo.admit(now, backlog_waves, lane.micro_batch,
-                                  lane.cfg.max_wait_ms / 1e3, lag_s=lag_s):
+                                  lane.cfg.max_wait_ms / 1e3, lag_s=lag_s,
+                                  n_workers=lane.pool.n_replicas):
                 req.shed = True
                 lane.n_shed += 1
                 lane.metrics.record_shed(now)
@@ -235,40 +321,102 @@ class Router:
 
     # -- dispatch ----------------------------------------------------------
     def _dispatch(self, lane: _Lane, n: int) -> int:
-        """Pop up to ``n`` requests and run them as one padded wave."""
+        """Pop up to ``n`` requests and submit them as one padded wave.
+
+        Under the blocking engine the wave also completes here; under the
+        async engine it lands in the in-flight table and ``reap`` settles
+        it later.
+        """
         n = min(n, len(lane.pending))
         if n == 0:
             return 0
         reqs = [lane.pending.popleft() for _ in range(n)]
         mb = lane.micro_batch
-        work_s = (lane.slo.wave_service_s(mb) if lane.slo is not None
-                  else 0.0)
+        work_s = lane.work_estimate_s()
         tr = self.tracer
         if tr.enabled:
             tr.instant("wave_assemble", cat="router", tid=lane.tid,
                        model=lane.name, n_valid=n)
         replica = lane.pool.place(work_s)
+        if not self.engine.blocking:
+            # backpressure: a replica never holds more than the engine's
+            # in-flight allowance — reap (in completion order) until the
+            # chosen replica frees a slot
+            while replica.n_inflight >= self.engine.max_inflight \
+                    and self._inflight:
+                self._settle(min(self._inflight, key=self._completion_key))
         xb = np.stack([r.x for r in reqs])
         t0 = self.clock.now()
-        y, mask = replica.run_wave(xb, micro_batch=mb)
-        done = self.clock.now()
-        lane.pool.complete(replica, work_s)
+        handle = self.engine.submit(replica, xb, micro_batch=mb)
+        replica.n_inflight += 1
+        lane.n_inflight += 1
+        self._wave_seq += 1
+        wave = _InFlightWave(lane=lane, reqs=reqs, replica=replica,
+                             handle=handle, t0=t0, work_s=work_s,
+                             n_valid=n, seq=self._wave_seq)
+        if self.engine.blocking:
+            self._complete(wave)
+        else:
+            self._inflight.append(wave)
+            if tr.enabled:
+                tr.counter("inflight", lane.n_inflight, t=t0, tid=lane.tid)
+        return n
+
+    # -- completion --------------------------------------------------------
+    @staticmethod
+    def _completion_key(w: _InFlightWave):
+        """Reap order: known completion times ascending (the discrete-event
+        contract — callbacks settle in event order), then submission order
+        for handles that don't pre-announce (real devices: FIFO)."""
+        rt = w.handle.ready_t
+        return (0, rt, w.seq) if rt is not None else (1, 0.0, w.seq)
+
+    def _settle(self, wave: _InFlightWave) -> None:
+        self._inflight.remove(wave)
+        self._complete(wave)
+
+    def _complete(self, wave: _InFlightWave) -> None:
+        """Wait on one wave and run its completion: stamp ``done_t``,
+        settle metrics, credit the pool, feed the SLO controller or lane
+        EWMA, close the wave/request trace spans."""
+        y, mask = wave.handle.wait()
+        lane = wave.lane
+        # a scripted handle knows the true completion instant (possibly
+        # earlier than this reap); a real device doesn't — the clock
+        # reading after the blocking wait is the completion
+        done = wave.handle.done_t
+        if done is None:
+            done = self.clock.now()
+        lane.pool.complete(wave.replica, wave.work_s)
+        wave.replica.n_inflight -= 1
+        lane.n_inflight -= 1
         y = np.asarray(y)
-        assert mask[:n].all() and not mask[n:].any(), mask
-        for i, r in enumerate(reqs):
-            r.result = y[i]
+        mask = np.asarray(mask)
+        n, mb = wave.n_valid, lane.micro_batch
+        if not (mask[:n].all() and not mask[n:].any()):
+            # a bare assert here would vanish under ``python -O`` and let
+            # an executor that mislabels its padding hand garbage rows to
+            # clients — this is a result-integrity check, not a debug aid
+            raise RuntimeError(
+                f"lane {lane.name!r}: executor returned an invalid wave "
+                f"mask {mask.tolist()} for {n} valid rows in a wave of "
+                f"{mb} — padded rows must be masked out and valid rows "
+                "masked in (see the submit_wave padding contract)")
+        for r in wave.reqs:
             r.done_t = done
+        for i, r in enumerate(wave.reqs):
+            r.result = y[i]
             lane.metrics.record_completion(done, done - r.arrival_t)
-        lane.metrics.record_wave(done, n, mb)
-        if lane.slo is not None:
-            lane.slo.observe_service(mb, done - t0)
+        lane.metrics.record_wave(done, n, mb, service_s=done - wave.t0)
+        lane.observe_service(done - wave.t0)
+        tr = self.tracer
         if tr.enabled:
             # the dispatch span carries the FIFO-cost-model *predicted*
             # service time next to its measured duration — one
             # predicted-vs-measured training row per wave (obs.report)
             args = {"model": lane.name, "platform": self.platform,
                     "n_valid": n, "micro_batch": mb,
-                    "replica": replica.index}
+                    "replica": wave.replica.index}
             if lane.service is not None:
                 args["predicted_ms"] = \
                     lane.service.wave_service_s(mb) * 1e3
@@ -276,10 +424,10 @@ class Router:
                     # the controller's EWMA-corrected estimate, for
                     # auditing admission decisions (distinct from the raw
                     # model prediction above)
-                    args["predicted_ewma_ms"] = work_s * 1e3
-            tr.add_span("wave", t0, done, cat="router",
-                        pid=1 + replica.index, tid=lane.tid, args=args)
-            for r in reqs:
+                    args["predicted_ewma_ms"] = wave.work_s * 1e3
+            tr.add_span("wave", wave.t0, done, cat="router",
+                        pid=1 + wave.replica.index, tid=lane.tid, args=args)
+            for r in wave.reqs:
                 # request span: arrival (enqueue) -> completion; duration
                 # is exactly the latency ServeMetrics recorded, so
                 # span-derived percentiles match snapshots to the bit
@@ -289,13 +437,38 @@ class Router:
             tr.counter("backlog", len(lane.pending), t=done, tid=lane.tid)
             tr.counter("wave_occupancy", n / max(mb, 1), t=done,
                        tid=lane.tid)
-        return n
+            if not self.engine.blocking:
+                tr.counter("inflight", lane.n_inflight, t=done,
+                           tid=lane.tid)
+
+    def reap(self, block: bool = False) -> int:
+        """Settle completed in-flight waves (all of them with ``block``);
+        returns the number of requests whose results landed. A no-op under
+        the blocking engine — waves never park in the table there."""
+        served = 0
+        while self._inflight:
+            now = self.clock.now()
+            ready = [w for w in self._inflight if w.handle.ready(now)]
+            if ready:
+                w = min(ready, key=self._completion_key)
+            elif block:
+                # nothing done yet: wait out the earliest completion
+                # (known ready_t first, else oldest submission)
+                w = min(self._inflight, key=self._completion_key)
+            else:
+                break
+            self._settle(w)
+            served += w.n_valid
+        return served
 
     # -- event loop hooks --------------------------------------------------
     def step(self, now: Optional[float] = None) -> int:
-        """Dispatch every lane whose wave is full or whose oldest pending
-        request has hit the max-wait deadline. Returns #requests served."""
+        """Reap finished waves, then dispatch every lane whose wave is full
+        or whose oldest pending request has hit the max-wait deadline.
+        Returns #requests dispatched (== completed under the blocking
+        engine)."""
         now = self.clock.now() if now is None else now
+        self.reap()
         served = 0
         for lane in self.lanes.values():
             while len(lane.pending) >= lane.micro_batch:
@@ -310,6 +483,18 @@ class Router:
         dls = [d for d in (lane.deadline() for lane in self.lanes.values())
                if d is not None]
         return min(dls) if dls else None
+
+    def _next_wake(self) -> Optional[float]:
+        """Earliest event the loop must wake for: a batch deadline or a
+        scripted in-flight completion. Real-device handles announce no
+        ready_t; the caller bounds its sleep with ``_POLL_S`` instead."""
+        times = [d for d in (self.next_deadline(),) if d is not None]
+        times += [w.handle.ready_t for w in self._inflight
+                  if w.handle.ready_t is not None]
+        return min(times) if times else None
+
+    def _has_blind_inflight(self) -> bool:
+        return any(w.handle.ready_t is None for w in self._inflight)
 
     def dispatch_one(self, model: str, max_n: Optional[int] = None) -> int:
         """Dispatch at most one (possibly partial) wave for one lane —
@@ -329,8 +514,11 @@ class Router:
         return served
 
     def drain(self) -> int:
-        """Flush everything; the end-of-trace barrier."""
-        return self.flush()
+        """Flush everything and reap every in-flight wave; the
+        end-of-trace barrier."""
+        served = self.flush()
+        self.reap(block=True)
+        return served
 
     # -- trace replay ------------------------------------------------------
     def run_trace(self, model: str, trace: Trace,
@@ -338,11 +526,13 @@ class Router:
                   ) -> List[ServeRequest]:
         """Replay an arrival trace against one lane in (clock) real time.
 
-        Between arrivals the router sleeps only as far as the next batch
-        deadline, so deadline flushes fire at the right moment even in
-        arrival gaps. Under a ``ManualClock`` this loop is an exact
-        simulation: sleeps advance the clock instantly and service time is
-        whatever the executor (or a scripted fake) makes of it.
+        Between arrivals the router sleeps only as far as the next event —
+        a batch deadline or (async engine) a scripted in-flight completion
+        — so deadline flushes and completion reaps fire at the right
+        moment even in arrival gaps. Under a ``ManualClock`` this loop is
+        an exact simulation: sleeps advance the clock instantly and
+        service time is whatever the executor (or a scripted fake) makes
+        of it.
         """
         t0 = self.clock.now()
         out: List[ServeRequest] = []
@@ -361,18 +551,24 @@ class Router:
                 i += 1
                 continue
             self.step()
-            dl = self.next_deadline()
-            if dl is not None and dl < target:
-                self.clock.sleep(max(dl - self.clock.now(), 0.0))
+            wake = self._next_wake()
+            if self._has_blind_inflight():
+                # real-device waves in flight: wake to reap at least every
+                # poll interval so completion stamping tracks the device
+                poll = self.clock.now() + _POLL_S
+                wake = poll if wake is None else min(wake, poll)
+            if wake is not None and wake < target:
+                self.clock.sleep(max(wake - self.clock.now(), 0.0))
                 self.step()
             else:
                 self.clock.sleep(max(target - self.clock.now(), 0.0))
-        # drain the tail: honour remaining deadlines, then flush
-        dl = self.next_deadline()
-        while dl is not None:
-            self.clock.sleep(max(dl - self.clock.now(), 0.0))
+        # drain the tail: honour remaining deadlines and scripted
+        # completions in event order, then flush + reap what's left
+        wake = self._next_wake()
+        while wake is not None:
+            self.clock.sleep(max(wake - self.clock.now(), 0.0))
             self.step()
-            dl = self.next_deadline()
+            wake = self._next_wake()
         self.drain()
         return out
 
@@ -385,6 +581,7 @@ class Router:
             snap = lane.metrics.snapshot(now)
             d = {"metrics": snap, "micro_batch": lane.micro_batch,
                  "pending": len(lane.pending),
+                 "inflight": lane.n_inflight,
                  "replicas": lane.pool.stats()}
             if lane.slo is not None:
                 d["slo"] = {

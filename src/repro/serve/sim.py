@@ -1,0 +1,93 @@
+"""Scripted replica simulator: exact discrete-event fakes for the router.
+
+``ScriptedWaveModel`` speaks the executor's ``submit_wave_async``
+protocol against a ``ManualClock``: submitting a wave *schedules* its
+completion (``ready_t = max(now, busy_until) + service_s``) without
+advancing the clock, the way a real device runs a wave in the background
+under JAX async dispatch. Each instance serializes its own waves (one
+device, one pipeline); instances built by a pool factory are independent,
+so waves on different replicas overlap and an N-replica pool behaves as N
+parallel servers with deterministic, hand-checkable timing.
+
+Two consumers:
+
+  * ``tests/test_serve_async.py`` — every expected latency is worked out
+    by hand against these fakes, not by re-running the router;
+  * ``benchmarks/serve_bench.py`` — the replica-scaling sweep anchors
+    ``service_s`` to a *measured* wave service time per model family and
+    sweeps replica count as a discrete-event simulation (the container
+    exposes one physical device, so real multi-device scaling cannot be
+    measured; the simulation isolates the router/engine scheduling from
+    the device count).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence, Union
+
+import numpy as np
+
+from repro.serve.replica import ReplicaPool
+
+
+class ScriptedWaveHandle:
+    """In-flight wave on the manual clock: knows its completion instant up
+    front; ``wait`` advances the clock there (no-op when reaped late)."""
+
+    def __init__(self, clock, ready_t: float, y, mask):
+        self.clock = clock
+        self.ready_t = ready_t
+        self.done_t = None
+        self._y, self._mask = y, mask
+
+    def wait(self):
+        self.clock.advance(max(self.ready_t - self.clock.now(), 0.0))
+        self.done_t = self.ready_t
+        return self._y, self._mask
+
+
+class ScriptedWaveModel:
+    """``submit_wave_async`` fake with the executor's padding contract:
+    waves complete ``service_s`` after the instance frees up, scheduled on
+    (not advancing) the manual clock. ``service_s`` may be a float or a
+    callable of the 1-based wave index (heterogeneous service times).
+    Outputs identify their input row (sum of codes) so results trace
+    back."""
+
+    def __init__(self, clock, service_s: Union[float, Callable] = 0.003,
+                 micro_batch: int = 4):
+        self.clock = clock
+        self.service_s = service_s
+        self.default_micro_batch = micro_batch
+        self.calls = []          # (n_valid, micro_batch) per wave
+        self.busy_until = 0.0
+
+    def submit_wave_async(self, x, valid=None, micro_batch=None
+                          ) -> ScriptedWaveHandle:
+        mb = int(micro_batch or self.default_micro_batch)
+        x = np.asarray(x)
+        n = x.shape[0]
+        if n > mb:
+            raise ValueError(f"wave of {n} rows exceeds micro_batch={mb}")
+        mask = np.ones(n, bool) if valid is None else np.asarray(valid, bool)
+        mask = np.concatenate([mask, np.zeros(mb - n, bool)])
+        self.calls.append((int(mask.sum()), mb))
+        s = self.service_s(len(self.calls)) if callable(self.service_s) \
+            else self.service_s
+        start = max(self.clock.now(), self.busy_until)
+        self.busy_until = start + s
+        y = np.zeros((mb, 1), np.float32)
+        y[:n, 0] = x.reshape(n, -1).sum(axis=1)
+        return ScriptedWaveHandle(self.clock, self.busy_until, y, mask)
+
+
+def scripted_pool(clock, services: Sequence[Union[float, Callable]],
+                  micro_batch: int = 2) -> ReplicaPool:
+    """Replica pool whose i-th replica runs at ``services[i]`` per wave —
+    the factory hands each replica slot its own independent scripted
+    model, so the pool simulates ``len(services)`` devices."""
+    it = iter(list(services))
+    return ReplicaPool(
+        factory=lambda: ScriptedWaveModel(clock, next(it),
+                                          micro_batch=micro_batch),
+        devices=[None] * len(services))

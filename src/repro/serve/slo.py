@@ -135,6 +135,33 @@ def measure_wave_service_s(cm, micro_batch: int, iters: int = 5) -> float:
     return times[len(times) // 2]
 
 
+def queued_waves(n_pending: int, micro_batch: int, n_inflight: int = 0
+                 ) -> int:
+    """Waves an arriving request must wait out before its own wave
+    completes, its own wave *excluded* (``SLOController.admit`` adds the
+    +1 for it): queued work counted in waves plus every wave still in
+    flight on a replica.
+
+    The queued term is ``ceil((n_pending + 1) / micro_batch) - 1`` — the
+    arriving request joins the queue and the total is rounded *up* to
+    whole waves, so the partial wave it lands in is priced. (For a pure
+    pending queue this equals ``n_pending // micro_batch``; the
+    floor-division form the router used to inline only *looked* like it
+    dropped the partial wave because of that identity — but it had no
+    slot for in-flight waves at all, which is where the async router's
+    real queue delay lives: a wave submitted but not completed still
+    occupies a replica exactly like a queued one.)
+    """
+    if micro_batch < 1:
+        raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
+    if n_pending < 0 or n_inflight < 0:
+        raise ValueError(
+            f"negative queue state: pending={n_pending} "
+            f"inflight={n_inflight}")
+    return (int(n_pending) + micro_batch) // micro_batch - 1 \
+        + int(n_inflight)
+
+
 class SLOController:
     """Per-model admission controller against a p99 latency budget.
 
@@ -199,18 +226,29 @@ class SLOController:
         return self.arrival_qps(now) * w
 
     def estimated_latency_s(self, backlog_waves: int, micro_batch: int,
-                            max_wait_s: float, lag_s: float = 0.0) -> float:
+                            max_wait_s: float, lag_s: float = 0.0,
+                            n_workers: int = 1) -> float:
         """Completion estimate for a request admitted *now*: the time it
         already spent blocked behind the server (``lag_s`` — arrival to
-        admission), worst-case batching wait, every queued wave ahead of
-        it, then its own wave's service."""
+        admission), worst-case batching wait, every queued or in-flight
+        wave ahead of it, then its own wave's service.
+
+        ``n_workers`` is the replica count draining the queue: an
+        N-replica pool under a non-blocking engine retires up to N waves
+        per service period, so the backlog's delay is
+        ``ceil(waves / N)`` service *rounds*, not ``waves`` serial
+        services (with ``n_workers=1`` this reduces exactly to the
+        single-worker arithmetic)."""
+        waves = int(backlog_waves) + 1
+        rounds = -(-waves // max(int(n_workers), 1))
         return max(lag_s, 0.0) + max_wait_s \
-            + (int(backlog_waves) + 1) * self.wave_service_s(micro_batch)
+            + rounds * self.wave_service_s(micro_batch)
 
     def admit(self, now: float, backlog_waves: int, micro_batch: int,
-              max_wait_s: float, lag_s: float = 0.0) -> bool:
+              max_wait_s: float, lag_s: float = 0.0,
+              n_workers: int = 1) -> bool:
         est = self.estimated_latency_s(backlog_waves, micro_batch,
-                                       max_wait_s, lag_s)
+                                       max_wait_s, lag_s, n_workers)
         return est * 1e3 <= self.p99_budget_ms * self.headroom
 
 

@@ -224,7 +224,8 @@ class TinyModelServer:
     replica placement, sliding-window metrics live there).
     """
 
-    def __init__(self, models: Dict[str, Any], max_batch: int = 32):
+    def __init__(self, models: Dict[str, Any], max_batch: int = 32,
+                 engine: Any = None):
         from repro.serve import Router, RouterConfig
 
         self.models = dict(models)
@@ -233,13 +234,18 @@ class TinyModelServer:
         self.finished: List[TinyRequest] = []
         self._uid = 0
         # explicitly-stepped router: waves of up to max_batch per tenant,
-        # dispatched only from step() (legacy drain semantics, no deadline)
+        # dispatched only from step() (legacy drain semantics, no deadline).
+        # ``engine`` passes through to the router (e.g.
+        # ``repro.serve.AsyncEngine()`` to overlap tenants' waves across a
+        # replica pool); step() reaps before reading results, so the
+        # legacy submit/step/stats contract holds under either engine.
         self.router = Router(
             {name: (m if hasattr(m, "submit_wave")
                     else _OfflineWaveAdapter(m))
              for name, m in self.models.items()},
             RouterConfig(micro_batch=max_batch, auto_dispatch=False,
-                         max_wait_ms=0.0))
+                         max_wait_ms=0.0),
+            engine=engine)
         self._routed: Dict[int, Any] = {}   # TinyRequest.uid -> ServeRequest
 
     def submit(self, model: str, x: np.ndarray) -> TinyRequest:
@@ -259,6 +265,9 @@ class TinyModelServer:
         served = 0
         for name in self.models:
             served += self.router.dispatch_one(name, max_n=self.max_batch)
+        # settle async in-flight waves before reading results back (a
+        # no-op under the default blocking engine)
+        self.router.reap(block=True)
         if served:
             still: List[TinyRequest] = []
             for req in self.queue:

@@ -20,6 +20,7 @@ import pytest
 from repro.core.qir import Graph
 from repro.deploy import compile_graph
 from repro.serve import (
+    AsyncEngine,
     ManualClock,
     ReplicaPool,
     Router,
@@ -27,6 +28,7 @@ from repro.serve import (
     ServeMetrics,
     ServiceModel,
     SLOController,
+    SyncEngine,
     diurnal_trace,
     mmpp_trace,
     poisson_trace,
@@ -423,10 +425,14 @@ def test_submit_wave_padded_partial_is_bit_exact(name):
         cm.submit_wave(x[:3], valid=np.ones(2, bool), micro_batch=4)
 
 
+@pytest.mark.parametrize("engine_cls", [SyncEngine, AsyncEngine],
+                         ids=["sync", "async"])
 @pytest.mark.parametrize("name", MODELS)
-def test_router_serves_golden_models_bit_exact(name):
+def test_router_serves_golden_models_bit_exact(name, engine_cls):
     """The acceptance path: requests through the dynamic batcher — full
-    waves AND a deadline-flushed padded partial wave — match offline."""
+    waves AND a deadline-flushed padded partial wave — match offline,
+    through BOTH dispatch engines (async parks waves in the in-flight
+    table and reaps them at drain; results must be identical)."""
     graph, x = _load(name)
     cm = compile_graph(graph, in_scale=graph.meta["in_scale"],
                        use_pallas=False)
@@ -434,11 +440,12 @@ def test_router_serves_golden_models_bit_exact(name):
     clock = ManualClock()
     router = Router({name: cm},
                     RouterConfig(max_wait_ms=1.0, micro_batch=3),
-                    clock=clock)
+                    clock=clock, engine=engine_cls())
     reqs = [router.submit(name, np.asarray(x[i]))
             for i in range(x.shape[0])]       # goldens have 4 rows: 3 + 1
     clock.advance(0.002)
     router.step()                             # deadline-flush the partial
+    router.drain()                            # settle async in-flight waves
     assert all(r.result is not None for r in reqs)
     for i, r in enumerate(reqs):
         _assert_rows_equal(r.result, y_off[i], f"{name} req {i}")

@@ -1,0 +1,370 @@
+"""Dispatch-engine tests: async replica overlap as an exact discrete-event
+simulation, sync bit-identity, and the placement/admission bugs the
+blocking router used to hide.
+
+The harness is ``repro.serve.sim.ScriptedWaveModel``: a fake executor
+speaking the ``submit_wave_async`` protocol — submitting a wave
+*schedules* its completion on the manual clock (``ready_t = max(now,
+busy_until) + service_s``) without advancing it, the way a real device
+runs a wave in the background under JAX async dispatch. Each instance
+serializes its own waves (one device, one pipeline); instances built by a
+pool factory are independent, so waves on different replicas overlap.
+Every expected latency below is worked out by hand, not by re-running the
+router.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    AsyncEngine,
+    ManualClock,
+    Router,
+    RouterConfig,
+    ServiceModel,
+    SyncEngine,
+    queued_waves,
+)
+from repro.serve.sim import scripted_pool as _pool
+
+
+# ---------------------------------------------------------------------------
+# overlap: max, not sum
+# ---------------------------------------------------------------------------
+
+def test_two_replicas_overlap_in_max_not_sum_of_service_times():
+    """Two full waves submitted back to back at t=0 on a two-replica pool:
+    async they run concurrently (3ms || 5ms -> all done at 5ms); sync they
+    serialize (3ms + 5ms -> 8ms)."""
+    for engine, expect_end, expect_done in (
+            (AsyncEngine(), 0.005, [0.003, 0.003, 0.005, 0.005]),
+            (SyncEngine(), 0.008, [0.003, 0.003, 0.008, 0.008])):
+        clock = ManualClock()
+        pool = _pool(clock, [0.003, 0.005])
+        router = Router({"m": pool}, RouterConfig(max_wait_ms=1.0),
+                        clock=clock, engine=engine)
+        reqs = [router.submit("m", np.ones((2,), np.int32),
+                              arrival_t=0.0) for _ in range(4)]
+        router.drain()
+        assert clock.now() == pytest.approx(expect_end), type(engine)
+        got = [r.done_t for r in reqs]
+        np.testing.assert_allclose(got, expect_done, rtol=1e-12,
+                                   err_msg=str(type(engine)))
+        assert all(r.result is not None for r in reqs)
+        # one wave per replica either way — the *schedule* differs
+        assert [len(r.model.calls) for r in pool.replicas] == [1, 1]
+
+
+def test_single_replica_serializes_waves_even_async():
+    """One replica is one pipeline: two async waves on it run back to back
+    (busy_until), not on top of each other."""
+    clock = ManualClock()
+    pool = _pool(clock, [0.003])
+    router = Router({"m": pool}, RouterConfig(max_wait_ms=1.0),
+                    clock=clock, engine=AsyncEngine())
+    reqs = [router.submit("m", np.ones((2,), np.int32), arrival_t=0.0)
+            for _ in range(4)]
+    router.drain()
+    assert [r.done_t for r in reqs] == \
+        pytest.approx([0.003, 0.003, 0.006, 0.006])
+
+
+def test_completions_settle_in_event_order():
+    """Wave 1 (5ms, replica 0) is submitted before wave 2 (3ms, replica 1)
+    but finishes after it: the reap must settle wave 2 first, so metrics
+    see completions in event time order, not submission order."""
+    clock = ManualClock()
+    pool = _pool(clock, [0.005, 0.003])
+    router = Router({"m": pool}, RouterConfig(max_wait_ms=1.0),
+                    clock=clock, engine=AsyncEngine())
+    reqs = [router.submit("m", np.ones((2,), np.int32), arrival_t=0.0)
+            for _ in range(4)]
+    router.drain()
+    assert [r.done_t for r in reqs] == \
+        pytest.approx([0.005, 0.005, 0.003, 0.003])
+    lane = router.lanes["m"]
+    times = [t for t, _ in lane.metrics._completions]
+    assert times == sorted(times)          # settled in event order
+    waves = [t for t, *_ in lane.metrics._waves]
+    assert waves == sorted(waves)
+
+
+def test_async_run_trace_overlap_exact_hand_sim():
+    """mb=2, service=10ms, two replicas, arrivals [0,1,2,3] ms.
+
+    Async: wave(r0,r1) submits @1ms on replica0 -> done 11ms; wave(r2,r3)
+    submits @3ms on replica1, overlapping -> done 13ms.
+      latencies = [11, 10, 11, 10] ms, trace ends at 13ms.
+    Sync: wave 1 blocks the loop 1..11ms, r2/r3 arrive late (arrival_t
+    kept), wave 2 runs 11..21ms.
+      latencies = [11, 10, 19, 18] ms, trace ends at 21ms.
+    """
+    from repro.serve import replay_trace
+
+    cases = ((AsyncEngine(), [11.0, 10.0, 11.0, 10.0], 0.013),
+             (SyncEngine(), [11.0, 10.0, 19.0, 18.0], 0.021))
+    for engine, expect_ms, expect_end in cases:
+        clock = ManualClock()
+        pool = _pool(clock, [0.010, 0.010])
+        router = Router({"m": pool}, RouterConfig(max_wait_ms=5.0),
+                        clock=clock, engine=engine)
+        trace = replay_trace(np.asarray([0.0, 1.0, 2.0, 3.0]) * 1e-3)
+        reqs = router.run_trace("m", trace,
+                                lambda i: np.ones((4,), np.int32))
+        got_ms = [r.latency_s * 1e3 for r in reqs]
+        np.testing.assert_allclose(got_ms, expect_ms, rtol=1e-9,
+                                   err_msg=str(type(engine)))
+        assert clock.now() == pytest.approx(expect_end), type(engine)
+        snap = router.stats()["m"]["metrics"]
+        assert snap.p99_ms == pytest.approx(np.percentile(expect_ms, 99))
+        assert snap.wave_service_p50_ms == pytest.approx(10.0)
+
+
+def test_async_backpressure_caps_inflight_per_replica():
+    """max_inflight=1 on one replica: the second wave's dispatch must
+    block-reap the first before submitting, so submission times (and thus
+    completions) serialize with no device-side queue."""
+    clock = ManualClock()
+    pool = _pool(clock, [0.004])
+    router = Router({"m": pool}, RouterConfig(max_wait_ms=1.0),
+                    clock=clock, engine=AsyncEngine(max_inflight=1))
+    for _ in range(4):
+        router.submit("m", np.ones((2,), np.int32), arrival_t=0.0)
+    # wave 1 in flight; wave 2's dispatch reaped wave 1 first
+    assert router.lanes["m"].n_inflight == 1
+    assert clock.now() == pytest.approx(0.004)
+    router.drain()
+    assert clock.now() == pytest.approx(0.008)
+    with pytest.raises(ValueError):
+        AsyncEngine(max_inflight=0)
+
+
+# ---------------------------------------------------------------------------
+# sync bit-identity through the engine seam
+# ---------------------------------------------------------------------------
+
+def test_sync_engine_bit_identical_to_default_hand_trace():
+    """The PR-5 hand-simulated 5-request trace, replayed through the
+    default router and through an explicit SyncEngine: latencies, wave
+    schedule, and percentiles must match to the bit (the engine seam adds
+    no timing)."""
+    from repro.serve import replay_trace
+    from tests.test_serve import ScriptedModel
+
+    results = []
+    for engine in (None, SyncEngine()):
+        clock = ManualClock()
+        model = ScriptedModel(clock, service_s=0.003, micro_batch=2)
+        router = Router({"m": model}, RouterConfig(max_wait_ms=5.0),
+                        clock=clock, engine=engine)
+        trace = replay_trace(np.asarray([0.0, 1.0, 10.0, 11.0, 30.0]) * 1e-3)
+        reqs = router.run_trace("m", trace,
+                                lambda i: np.ones((4,), np.int32))
+        snap = router.stats()["m"]["metrics"]
+        results.append(([r.latency_s for r in reqs], model.calls,
+                        (snap.p50_ms, snap.p90_ms, snap.p99_ms)))
+    (lat_a, calls_a, p_a), (lat_b, calls_b, p_b) = results
+    assert lat_a == lat_b                  # bit-identical, not approx
+    assert calls_a == calls_b == [(2, 2), (2, 2), (1, 2)]
+    assert p_a == p_b
+    np.testing.assert_allclose(np.asarray(lat_a) * 1e3,
+                               [4.0, 3.0, 4.0, 3.0, 8.0], rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# placement: least work needs a real work estimate (bugfix)
+# ---------------------------------------------------------------------------
+
+def test_placement_avoids_busy_replica_with_service_model_no_slo():
+    """No SLO controller, but a lane ServiceModel: placement must charge
+    the modeled wave time, so a replica with a slow wave in flight loses
+    to an idle one. (With the old work_s=0 charge all replicas tie forever
+    and the tie-break — fewest dispatches, then index — would have sent
+    wave 3 back to the *busy* replica 0.)"""
+    clock = ManualClock()
+    pool = _pool(clock, [0.005, 0.001])
+    svc = ServiceModel(works=[("s", 0)], sec_per_cycle=0.004 / 9)
+    router = Router({"m": pool}, RouterConfig(max_wait_ms=1.0),
+                    clock=clock, service_models={"m": svc},
+                    engine=AsyncEngine())
+    lane = router.lanes["m"]
+    assert lane.slo is None
+    assert lane.work_estimate_s() == pytest.approx(0.004)
+    x = np.ones((2,), np.int32)
+    for _ in range(4):                      # wave1 -> r0, wave2 -> r1
+        router.submit("m", x, arrival_t=0.0)
+    r0, r1 = pool.replicas
+    assert (r0.n_dispatched, r1.n_dispatched) == (1, 1)
+    assert r0.outstanding_s == pytest.approx(0.004)
+    clock.advance(0.002)
+    router.step()                           # reaps wave2 (done @1ms) only
+    assert (r0.n_inflight, r1.n_inflight) == (1, 0)
+    for _ in range(2):                      # wave3: r0 busy -> r1 again
+        router.submit("m", x, arrival_t=clock.now())
+    assert (r0.n_dispatched, r1.n_dispatched) == (1, 2)
+    assert len(r1.model.calls) == 2
+    router.drain()
+    assert r0.outstanding_s == r1.outstanding_s == 0.0
+
+
+def test_placement_falls_back_to_measured_ewma_without_any_model():
+    """No SLO, no ServiceModel: after the first completions the lane's
+    EWMA of measured wave times becomes the placement charge (the last
+    line of defense against the silent round-robin degeneration)."""
+    clock = ManualClock()
+    pool = _pool(clock, [0.005, 0.001])
+    router = Router({"m": pool}, RouterConfig(max_wait_ms=1.0),
+                    clock=clock, engine=AsyncEngine())
+    lane = router.lanes["m"]
+    assert lane.work_estimate_s() == 0.0    # nothing observed yet
+    x = np.ones((2,), np.int32)
+    for _ in range(4):
+        router.submit("m", x, arrival_t=0.0)
+    router.drain()
+    # completions settle in event order: 1ms wave seeds the EWMA, 5ms
+    # wave blends in at alpha=0.25
+    assert lane.ewma_service_s == pytest.approx(0.75 * 0.001 + 0.25 * 0.005)
+    assert lane.work_estimate_s() == lane.ewma_service_s
+    # the next wave charges that estimate at placement
+    router.submit("m", x, arrival_t=clock.now())
+    router.submit("m", x, arrival_t=clock.now())
+    charged = [r.outstanding_s for r in pool.replicas]
+    assert max(charged) == pytest.approx(lane.ewma_service_s)
+    router.drain()
+
+
+# ---------------------------------------------------------------------------
+# admission: in-flight waves are queue delay (bugfix)
+# ---------------------------------------------------------------------------
+
+def test_admission_counts_inflight_waves_hand_simulated():
+    """One replica, mb=2, 10ms waves, 25ms budget, 2ms max-wait, six
+    arrivals at t=0. Hand-worked admission estimates (est = max_wait +
+    (backlog+1)*service):
+
+      r0, r1: backlog 0            -> est 12ms, admit; wave 1 in flight
+      r2, r3: 1 wave in flight     -> est 22ms, admit; wave 2 in flight
+      r4, r5: 2 waves in flight    -> est 32ms > 25ms -> SHED
+
+    The pre-fix router priced backlog as len(pending)//mb with no
+    in-flight term: every estimate would have been 12ms and r4/r5 would
+    have been admitted into a queue already worth ~30ms of service —
+    exactly the silent SLO violation the blocking engine never exposed
+    (its dispatch blocked the clock, so `lag_s` papered over the hole).
+    """
+    clock = ManualClock()
+    pool = _pool(clock, [0.010])
+    svc = ServiceModel(works=[("s", 0)], sec_per_cycle=0.010 / 9)
+    assert svc.wave_service_s(2) == pytest.approx(0.010)
+    router = Router(
+        {"m": pool},
+        RouterConfig(max_wait_ms=2.0, p99_budget_ms=25.0),
+        clock=clock, service_models={"m": svc}, engine=AsyncEngine())
+    reqs = [router.submit("m", np.ones((2,), np.int32), arrival_t=0.0)
+            for _ in range(6)]
+    assert [r.shed for r in reqs] == [False] * 4 + [True] * 2
+    router.drain()
+    served = [r for r in reqs if not r.shed]
+    np.testing.assert_allclose([r.latency_s for r in served],
+                               [0.010, 0.010, 0.020, 0.020], rtol=1e-9)
+    # every served request inside the budget — the point of shedding
+    assert max(r.latency_s for r in served) * 1e3 <= 25.0
+    snap = router.stats()["m"]["metrics"]
+    assert snap.n_shed == 2 and snap.n_completed == 4
+
+
+def test_admission_divides_backlog_across_pool_workers():
+    """Same setup as above but TWO replicas: the pool drains two waves per
+    service period, so estimates fall by ~half and all six requests fit
+    the 25ms budget. est = max_wait + ceil((inflight+1)/2)*service:
+    r0/r1 12ms, r2/r3 12ms (1 in flight), r4/r5 22ms (2 in flight) — all
+    admitted; waves land [10, 10, 20] ms."""
+    clock = ManualClock()
+    pool = _pool(clock, [0.010, 0.010])
+    svc = ServiceModel(works=[("s", 0)], sec_per_cycle=0.010 / 9)
+    router = Router(
+        {"m": pool},
+        RouterConfig(max_wait_ms=2.0, p99_budget_ms=25.0),
+        clock=clock, service_models={"m": svc}, engine=AsyncEngine())
+    reqs = [router.submit("m", np.ones((2,), np.int32), arrival_t=0.0)
+            for _ in range(6)]
+    assert [r.shed for r in reqs] == [False] * 6
+    router.drain()
+    np.testing.assert_allclose(
+        [r.latency_s for r in reqs],
+        [0.010, 0.010, 0.010, 0.010, 0.020, 0.020], rtol=1e-9)
+    assert max(r.latency_s for r in reqs) * 1e3 <= 25.0
+
+
+def test_queued_waves_formula():
+    # empty queue: only your own wave (the controller's +1) remains
+    assert queued_waves(0, 4) == 0
+    # partial wave ahead: you join it — still zero *extra* waves
+    assert queued_waves(3, 4) == 0
+    # a full wave queued ahead of the one you join
+    assert queued_waves(4, 4) == 1
+    assert queued_waves(7, 4) == 1
+    assert queued_waves(8, 4) == 2
+    # in-flight waves are queue delay too
+    assert queued_waves(0, 4, n_inflight=2) == 2
+    assert queued_waves(5, 4, n_inflight=1) == 2
+    with pytest.raises(ValueError):
+        queued_waves(1, 0)
+    with pytest.raises(ValueError):
+        queued_waves(-1, 4)
+
+
+# ---------------------------------------------------------------------------
+# mask validation survives python -O (bugfix)
+# ---------------------------------------------------------------------------
+
+class _LyingModel:
+    """Fake executor violating the padding contract: claims every row of
+    the padded wave is valid."""
+
+    default_micro_batch = 4
+
+    def submit_wave(self, x, valid=None, micro_batch=None):
+        mb = int(micro_batch or self.default_micro_batch)
+        return np.zeros((mb, 1), np.float32), np.ones(mb, bool)
+
+
+@pytest.mark.parametrize("engine", [SyncEngine(), AsyncEngine()])
+def test_lying_executor_mask_raises_runtime_error(engine):
+    clock = ManualClock()
+    router = Router({"m": _LyingModel()}, RouterConfig(max_wait_ms=1.0),
+                    clock=clock, engine=engine)
+    router.submit("m", np.ones((2,), np.int32))
+    clock.advance(0.002)
+    with pytest.raises(RuntimeError, match="mask"):
+        router.step()
+        router.drain()
+
+
+# ---------------------------------------------------------------------------
+# the shim under an async engine
+# ---------------------------------------------------------------------------
+
+def test_tiny_model_server_shim_settles_results_under_async_engine():
+    from repro.serving.engine import TinyModelServer
+
+    class _Echo:
+        default_micro_batch = 4
+
+        def submit_wave(self, x, valid=None, micro_batch=None):
+            x = np.asarray(x)
+            mb = int(micro_batch or self.default_micro_batch)
+            n = x.shape[0]
+            mask = np.concatenate([np.ones(n, bool), np.zeros(mb - n, bool)])
+            y = np.zeros((mb,) + x.shape[1:], x.dtype)
+            y[:n] = x * 2
+            return y, mask
+
+    server = TinyModelServer({"echo": _Echo()}, max_batch=4,
+                             engine=AsyncEngine())
+    reqs = [server.submit("echo", np.full((3,), i, np.int32))
+            for i in range(5)]
+    server.run_until_drained()
+    assert all(r.result is not None for r in reqs)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.result, np.full((3,), 2 * i))
