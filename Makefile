@@ -1,6 +1,6 @@
 .PHONY: test test-fast bench bench-table6 bench-scenarios bench-serve \
 	bench-scaling bench-obs trace-demo lint lint-clock lint-residency \
-	example
+	lint-assert chaos example
 
 test:            ## full tier-1 suite
 	./scripts/test.sh
@@ -29,13 +29,20 @@ bench-obs:       ## NullTracer overhead assert + FIFO prediction-error table
 trace-demo:      ## one traced server run -> Perfetto timeline artifact
 	PYTHONPATH=src:. python benchmarks/obs_bench.py --demo
 
-lint: lint-clock lint-residency  ## every static check CI runs
+lint: lint-clock lint-residency lint-assert  ## every static check CI runs
 
 lint-clock:      ## no raw stdlib clock reads outside repro.obs.timer
 	python scripts/check_no_raw_clock.py
 
 lint-residency:  ## megakernel plans never exceed the VMEM cap (goldens)
 	python scripts/check_megakernel_residency.py
+
+lint-assert:     ## no bare asserts in serve/deploy (python -O safety)
+	python scripts/check_no_bare_assert.py
+
+chaos:           ## deterministic fault-injection suite, plain and under -O
+	PYTHONPATH=src python -m pytest -x -q tests/test_faults.py
+	PYTHONPATH=src python -O -m pytest -x -q tests/test_faults.py
 
 example:         ## the end-to-end codesign + compiled-deployment example
 	PYTHONPATH=src python examples/mlperf_tiny_codesign.py

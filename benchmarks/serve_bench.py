@@ -261,6 +261,77 @@ def bench_scaling(name: str, service_s: float, mb: int,
     return out
 
 
+# ---------------------------------------------------------------------------
+# degraded capacity: 1-of-2 replicas killed mid-trace (fault handling bench)
+# ---------------------------------------------------------------------------
+
+def bench_faults(service_s: float, mb: int, n_queries: int = 200,
+                 seed: int = 23):
+    """Kill one of two replicas halfway through a Poisson trace at 0.7x
+    the *aggregate* saturation and report the degradation: pre- vs
+    post-kill p99, shed rate, and the zero-lost guarantee (every admitted
+    request is either served or shed with a typed reason — never hung,
+    never silently dropped). Discrete-event simulation anchored to the
+    measured wave service like the scaling sweep, so the row is exact and
+    reproducible."""
+    from repro.serve import FaultPlan, FaultSpec
+    from repro.serve.replica import QUARANTINED
+
+    budget_ms = max(10.0, 6.0 * service_s * 1e3)
+    max_wait_ms = max(2.0, 1.5 * service_s * 1e3)
+    offered = 0.7 * 2 * (mb / service_s)
+    trace = poisson_trace(qps=offered, n=n_queries, seed=seed)
+    t_kill = float(np.asarray(trace.arrivals)[n_queries // 2])
+    clock = ManualClock()
+    plan = FaultPlan([FaultSpec("replica_crash", replica=0,
+                                after_t=t_kill,
+                                duration_s=float("inf"))])
+    pool = scripted_pool(clock, [service_s] * 2, micro_batch=mb,
+                         plan=plan)
+    router = Router(
+        {"m": pool},
+        RouterConfig(max_wait_ms=max_wait_ms, micro_batch=mb,
+                     p99_budget_ms=budget_ms, wave_timeout_mult=3.0,
+                     retry_backoff_ms=0.5, max_retries=2),
+        clock=clock,
+        service_models={"m": _scaling_service_model(service_s, mb)},
+        engine=AsyncEngine())
+    reqs = router.run_trace(
+        "m", trace, lambda i: np.full((2,), i % 128, np.int32))
+
+    lost = [r for r in reqs if not r.shed and r.result is None]
+    if lost:
+        # the headline guarantee of the fault-handling PR; a bench that
+        # quietly published rows past this would be lying about it
+        raise RuntimeError(
+            f"fault bench lost {len(lost)} admitted requests "
+            f"(uids {[r.uid for r in lost[:8]]}) — the zero-lost "
+            "guarantee is broken")
+
+    def _stats(rs):
+        served = [r for r in rs if not r.shed]
+        lats = np.asarray([r.latency_s for r in served]) * 1e3
+        return {
+            "n": len(rs), "served": len(served),
+            "shed_rate": 1.0 - len(served) / len(rs) if rs else 0.0,
+            "p99_ms": float(np.percentile(lats, 99)) if served else None,
+        }
+
+    snap = router.stats()["m"]["metrics"]
+    return {
+        "offered_qps": offered, "micro_batch": mb,
+        "wave_service_ms": service_s * 1e3,
+        "p99_budget_ms": budget_ms, "t_kill_s": t_kill,
+        "pre_kill": _stats([r for r in reqs if r.arrival_t < t_kill]),
+        "post_kill": _stats([r for r in reqs if r.arrival_t >= t_kill]),
+        "fault_counts": dict(snap.fault_counts),
+        "shed_reasons": dict(snap.shed_reasons),
+        "killed_replica_quarantined":
+            pool.replicas[0].health == QUARANTINED,
+        "zero_lost": True,
+    }
+
+
 def _build_entries(key, rng):
     entries = {}
     kws, ad = KWSMLP(), ADAutoencoder()
@@ -358,6 +429,23 @@ def run():
             qps_at_slo=("-" if op is None
                         else f"{op['achieved_qps']:.0f}"),
             at_load=("-" if op is None else op["load_fraction"])))
+    # degraded-capacity row: 1-of-2 replicas killed at t=half, anchored to
+    # the first family's measured wave service (the fault machinery is
+    # model-agnostic; one exact simulated row tracks it across PRs)
+    anchor = next(iter(doc["models"]))
+    flt = bench_faults(doc["models"][anchor]["wave_service_ms"] / 1e3,
+                       doc["models"][anchor]["micro_batch"])
+    doc["faults"] = {"anchor_model": anchor, **flt}
+    rows.append(row(
+        "serve/faults/kill_1of2", 0.0,
+        offered_qps=f"{flt['offered_qps']:.0f}",
+        pre_p99_ms=(f"{flt['pre_kill']['p99_ms']:.3f}"
+                    if flt["pre_kill"]["p99_ms"] is not None else "-"),
+        post_p99_ms=(f"{flt['post_kill']['p99_ms']:.3f}"
+                     if flt["post_kill"]["p99_ms"] is not None else "-"),
+        post_shed=f"{flt['post_kill']['shed_rate']:.3f}",
+        quarantined=flt["killed_replica_quarantined"],
+        zero_lost=flt["zero_lost"]))
     print_rows(rows)
     emit_json("BENCH_serving.json", doc)
     return rows

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Lint: no bare ``assert`` statements in the serving/deploy runtime.
+
+``python -O`` strips assert statements. In library code that is fine for
+debug invariants, but the serve router and the deploy executor use their
+checks as *load-bearing* input validation and result-integrity guards —
+a mask-contract check or a fifo-depth check that silently vanishes under
+``-O`` turns a typed failure into served garbage. Those paths must raise
+typed exceptions (``ValueError``, ``RuntimeError``, ``serve.faults.*``)
+instead, and CI runs the chaos suite under ``python -O`` to prove the
+failure handling doesn't evaporate.
+
+This script (wired into ``make lint`` and CI) fails the build on any
+``assert`` statement under ``src/repro/serve`` or ``src/repro/deploy``.
+Test files keep using assert freely — pytest rewrites them.
+
+Usage: python scripts/check_no_bare_assert.py [root]
+Exits 0 when clean, 1 with a file:line listing otherwise.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+#: Packages whose asserts must be typed exceptions instead.
+SCAN_DIRS = (
+    os.path.join("src", "repro", "serve"),
+    os.path.join("src", "repro", "deploy"),
+)
+
+#: An assert *statement* (line-leading); ``self.assertEqual`` or the word
+#: inside a string/comment doesn't match.
+PATTERN = re.compile(r"^\s*assert\b")
+
+#: Lines where the match is not an assert statement.
+EXEMPT_LINE = re.compile(r"^\s*#|\"\"\"|'''")
+
+
+def scan(root: str) -> list[tuple[str, int, str]]:
+    hits = []
+    for sub in SCAN_DIRS:
+        base = os.path.join(root, sub)
+        for dirpath, _, files in os.walk(base):
+            for fname in sorted(files):
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, root)
+                with open(path, encoding="utf-8") as f:
+                    for i, line in enumerate(f, 1):
+                        if PATTERN.match(line) \
+                                and not EXEMPT_LINE.match(line):
+                            hits.append((rel, i, line.rstrip()))
+    return hits
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    hits = scan(root)
+    if hits:
+        print("bare assert statements in serve/deploy runtime code "
+              "(they vanish under python -O; raise a typed exception):")
+        for rel, i, line in hits:
+            print(f"  {rel}:{i}: {line}")
+        return 1
+    print("check_no_bare_assert: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -383,7 +383,10 @@ class CompiledTinyModel:
         depths, sim_cycles = self.plan_streaming(n_micro,
                                                  micro_batch=micro_batch)
         if fifo_depths is not None:
-            assert len(fifo_depths) == len(depths), (fifo_depths, depths)
+            if len(fifo_depths) != len(depths):
+                raise ValueError(
+                    f"fifo_depths has {len(fifo_depths)} entries for "
+                    f"{len(depths)} pipeline queues: {list(fifo_depths)}")
             depths = [max(1, int(d)) for d in fifo_depths]
 
         n_stages = len(self.schedule.stages)
@@ -391,7 +394,10 @@ class CompiledTinyModel:
         max_occ = [0] * (n_stages + 1)
         order = list(feed_order) if feed_order is not None \
             else list(range(n_micro))
-        assert sorted(order) == list(range(n_micro)), order
+        if sorted(order) != list(range(n_micro)):
+            raise ValueError(
+                f"feed_order must be a permutation of range({n_micro}), "
+                f"got {order}")
         feed = [(i, x_int[i * micro_batch:(i + 1) * micro_batch])
                 for i in order]
         feed_i = 0
@@ -479,7 +485,21 @@ class CompiledTinyModel:
         buf = np.zeros((mb,) + xb.shape[1:], xb.dtype)
         buf[:n][mask[:n]] = xb[mask[:n]]
         wave = jnp.asarray(buf[None])
-        wave = self._run_segments(wave, 1, mode="submit_wave")
+        try:
+            wave = self._run_segments(wave, 1, mode="submit_wave")
+        except Exception as e:
+            # raw backend/runtime exceptions must not escape the serving
+            # entry point untyped: wrap them so the router's failure
+            # machinery (retry on another replica, quarantine) can catch
+            # one class instead of guessing. The validation ValueErrors
+            # above stay raw — a malformed wave is a caller bug, not a
+            # device failure. Imported lazily on the failure path only:
+            # deploy must not depend on serve at module level.
+            from repro.serve.faults import WaveError
+
+            raise WaveError(
+                f"wave of {n}/{mb} rows failed in the compiled segment "
+                f"pipeline: {type(e).__name__}: {e}") from e
         return wave[0], mask
 
     def _run_segments(self, wave, n_micro: int, mode: str):

@@ -14,7 +14,12 @@ p99 budget blows using the FIFO cost model calibrated by measured stage
 latencies, traffic generators (``traffic``) produce seedable
 Poisson/bursty/diurnal/replay arrival traces, and sliding-window metrics
 (``metrics``) report percentiles, throughput, shed rate, and wave
-occupancy. Everything reads time through an injectable clock (``clock``),
+occupancy. A seedable fault-injection plane (``faults``) drives wave
+timeouts, replica crashes/slowdowns, corrupt outputs, and transient
+submit errors through a deterministic schedule, and the router answers
+with wave deadlines, bounded retries, a replica health state machine,
+and an output integrity guard — see ``docs/faults.md``.
+Everything reads time through an injectable clock (``clock``),
 so the whole server is a deterministic discrete-event system under
 ``ManualClock`` — see ``docs/serving.md``.
 
@@ -29,6 +34,21 @@ from repro.serve.dispatch import (  # noqa: F401
     DispatchEngine,
     SyncEngine,
     WaveHandle,
+)
+from repro.serve.faults import (  # noqa: F401
+    DEFAULT_OUTPUT_BOUND,
+    CorruptWave,
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    FaultyModel,
+    NoReplicaAvailable,
+    ReplicaCrashed,
+    TransientSubmitError,
+    WaveError,
+    WaveTimeout,
+    faulty_pool,
+    wave_integrity_ok,
 )
 from repro.serve.metrics import (  # noqa: F401
     MetricsSnapshot,

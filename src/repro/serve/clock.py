@@ -39,9 +39,13 @@ class ManualClock:
         return self.t
 
     def sleep(self, seconds: float) -> None:
-        assert seconds >= 0, seconds
+        # typed, not a bare assert: sleeping a negative duration would
+        # silently run time backwards under ``python -O``
+        if seconds < 0:
+            raise ValueError(f"cannot sleep a negative duration: {seconds}")
         self.t += seconds
 
     def advance(self, seconds: float) -> None:
-        assert seconds >= 0, seconds
+        if seconds < 0:
+            raise ValueError(f"cannot advance time backwards: {seconds}")
         self.t += seconds

@@ -36,6 +36,8 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
+from repro.serve.faults import WaveTimeout
+
 
 class WaveHandle:
     """One in-flight wave on one replica.
@@ -49,6 +51,13 @@ class WaveHandle:
     devices don't pre-announce). ``done_t`` is set by ``wait()`` when the
     model knows the true completion instant; the router falls back to its
     own clock reading otherwise.
+
+    ``deadline_t`` is the router's wave timeout (submit time + the lane's
+    service estimate x ``RouterConfig.wave_timeout_mult``), ``None`` when
+    timeouts are off. A wave still unfinished past its deadline is
+    ``cancel``-ed: the handle reports not-ready forever after, and a
+    late ``wait`` raises ``WaveTimeout`` instead of handing a client a
+    result the router already re-dispatched elsewhere.
     """
 
     def __init__(self, replica, y=None, mask=None, *, inner=None):
@@ -59,6 +68,15 @@ class WaveHandle:
         self._result: Optional[Tuple[object, object]] = None
         self.ready_t: Optional[float] = getattr(inner, "ready_t", None)
         self.done_t: Optional[float] = None
+        self.deadline_t: Optional[float] = None
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        """Abandon the wave: the device may still finish it, but its
+        result must never reach a client (the router re-dispatched the
+        requests). Idempotent; a completed handle keeps its result."""
+        if self._result is None:
+            self.cancelled = True
 
     def ready(self, now: Optional[float] = None) -> bool:
         """Non-blocking readiness probe. Scripted handles compare their
@@ -67,6 +85,8 @@ class WaveHandle:
         subsequent ``wait`` blocks as needed)."""
         if self._result is not None:
             return True
+        if self.cancelled:
+            return False
         if self.ready_t is not None:
             return now is not None and now >= self.ready_t
         probe = getattr(self._y, "is_ready", None)
@@ -78,9 +98,16 @@ class WaveHandle:
         return True
 
     def wait(self) -> Tuple[object, object]:
-        """Block until the wave's result is materialized (idempotent)."""
+        """Block until the wave's result is materialized (idempotent).
+        A cancelled handle raises ``WaveTimeout`` instead of blocking —
+        the wave was abandoned past its deadline and its requests live
+        elsewhere now."""
         if self._result is not None:
             return self._result
+        if self.cancelled:
+            raise WaveTimeout(
+                f"wave on replica {getattr(self.replica, 'index', '?')} "
+                "was cancelled past its deadline")
         if self._inner is not None:
             y, mask = self._inner.wait()
             self.done_t = getattr(self._inner, "done_t", self.ready_t)

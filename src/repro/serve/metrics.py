@@ -43,6 +43,12 @@ class MetricsSnapshot:
     #: window's waves; 0.0 when no wave carried a measurement. The number
     #: the lane's EWMA placement estimate converges to.
     wave_service_p50_ms: float = 0.0
+    #: fault kind -> count in the window (retried timeouts, integrity
+    #: violations, crashed submissions...) — the chaos observability story
+    fault_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: shed reason -> count ("slo" admission sheds, "no_replica",
+    #: "retries_exhausted")
+    shed_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, object]:
         return {
@@ -54,6 +60,8 @@ class MetricsSnapshot:
             "waves": self.n_waves,
             "occupancy": round(self.mean_occupancy, 3),
             "wave_service_p50_ms": round(self.wave_service_p50_ms, 4),
+            "faults": dict(self.fault_counts),
+            "shed_reasons": dict(self.shed_reasons),
         }
 
 
@@ -69,7 +77,9 @@ class ServeMetrics:
         self.first_event_t: Optional[float] = None
         self._completions: Deque[Tuple[float, float]] = collections.deque()
         self._admits: Deque[float] = collections.deque()
-        self._sheds: Deque[float] = collections.deque()
+        self._sheds: Deque[Tuple[float, str]] = collections.deque()
+        #: (t, kind) per observed fault event (timeout, integrity, ...)
+        self._faults: Deque[Tuple[float, str]] = collections.deque()
         #: (t, n_valid, micro_batch, service_s or None) per dispatched wave
         self._waves: Deque[Tuple[float, int, int, Optional[float]]] = \
             collections.deque()
@@ -83,9 +93,20 @@ class ServeMetrics:
         self._mark(now)
         self._admits.append(now)
 
-    def record_shed(self, now: float) -> None:
+    def record_shed(self, now: float, reason: str = "slo") -> None:
+        """One rejected request; ``reason`` distinguishes admission sheds
+        ("slo", the default every legacy caller gets) from failure-path
+        sheds ("no_replica", "retries_exhausted")."""
         self._mark(now)
-        self._sheds.append(now)
+        self._sheds.append((now, str(reason)))
+
+    def record_fault(self, now: float, kind: str) -> None:
+        """One observed fault event (a wave timeout, a corrupt output, a
+        crashed/failed submission) — counted per kind in the window.
+        Faults are *not* sheds: a retried wave that eventually lands shows
+        up here but never in the shed rate."""
+        self._mark(now)
+        self._faults.append((now, str(kind)))
 
     def record_completion(self, now: float, latency_s: float) -> None:
         self._mark(now)
@@ -115,8 +136,10 @@ class ServeMetrics:
             self._completions.popleft()
         while self._admits and self._admits[0] < cutoff:
             self._admits.popleft()
-        while self._sheds and self._sheds[0] < cutoff:
+        while self._sheds and self._sheds[0][0] < cutoff:
             self._sheds.popleft()
+        while self._faults and self._faults[0][0] < cutoff:
+            self._faults.popleft()
         while self._waves and self._waves[0][0] < cutoff:
             self._waves.popleft()
 
@@ -148,6 +171,12 @@ class ServeMetrics:
                 services.append(service_s)
         wave_p50 = (float(np.percentile(np.asarray(services) * 1e3, 50))
                     if services else 0.0)
+        faults: Dict[str, int] = {}
+        for _, kind in self._faults:
+            faults[kind] = faults.get(kind, 0) + 1
+        reasons: Dict[str, int] = {}
+        for _, reason in self._sheds:
+            reasons[reason] = reasons.get(reason, 0) + 1
         return MetricsSnapshot(
             window_s=self.window_s,
             n_completed=len(self._completions),
@@ -160,4 +189,6 @@ class ServeMetrics:
             mean_occupancy=occ / len(self._waves) if self._waves else 0.0,
             occupancy_hist=hist,
             wave_service_p50_ms=wave_p50,
+            fault_counts=faults,
+            shed_reasons=reasons,
         )

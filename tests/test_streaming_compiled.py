@@ -142,7 +142,9 @@ def test_streaming_host_out_of_order_feed_restores_batch_order():
     y_rev, _ = cm.streaming_host(x, micro_batch=2,
                                  feed_order=list(reversed(range(n_micro))))
     _assert_same(y_rev, cm.offline(x), "reversed feed")
-    with pytest.raises(AssertionError):
+    # typed, not AssertionError: the permutation check is load-bearing
+    # input validation and must survive python -O
+    with pytest.raises(ValueError, match="permutation"):
         cm.streaming_host(x, micro_batch=2, feed_order=[0] * n_micro)
 
 
