@@ -1,0 +1,218 @@
+"""Learned wave-cost predictor benchmark: LOMO error vs the analytic FIFO
+model + probed-vs-predicted autotune agreement (``BENCH_costmodel.json``).
+
+The rule4ml loop (ROADMAP direction 5), measured end to end:
+
+  1. **Harvest** — traced ``server_streaming`` runs of the golden families
+     at several wave sizes record every dispatched wave's measured service
+     next to the analytic FIFO prediction
+     (``obs.report.prediction_records``); a probe-mode autotune pass per
+     family contributes its audit-trail probes. ``repro.costmodel.dataset``
+     joins both into the deterministic training table (saved next to the
+     bench artifacts, plus the raw JSONL trace shards).
+  2. **Validate (LOMO)** — hold each family out, train the predictor on the
+     rest, score the held-out waves. The **asserted** acceptance bar:
+     pooled median absolute relative error of the learned predictor <= the
+     analytic FIFO model's on the same waves (the same error the obs bench
+     publishes in ``BENCH_obs.json``) — the learned model must beat the
+     hand-built baseline it bootstraps from, on families it never saw.
+  3. **Agreement** — autotune each family twice: probe mode (measured
+     refinement) vs model mode (probe-free, predictor trained on the full
+     table). Where the chosen (micro_batch, segment_mode) match, agreement
+     is exact by construction; where they differ, both configs are probed
+     and the predicted config must hold >= 90% of the probed config's
+     throughput (**asserted** — the probe-free mode is only useful if its
+     configs are not left on the table).
+
+Set REPRO_FAST=1 for a reduced-size pass (CI / smoke: 2 families).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import banner, bench_dir, emit_json, print_rows, row
+from benchmarks.table6_scenarios import _compile_conv, _compile_mlp
+from repro.costmodel import (WaveCostPredictor, build_dataset,
+                             compiled_feature_resolver, leave_one_model_out)
+from repro.deploy.autotune import (autotune_model, load_config,
+                                   probe_streaming, schedule_key)
+from repro.deploy.scenarios import server_streaming
+from repro.models.tiny import ADAutoencoder, CNVModel, ICModel, KWSMLP
+from repro.obs import Tracer, export_prediction_records
+from repro.obs.report import prediction_records
+from repro.serve import ServiceModel, measure_wave_service_s
+
+FAST = os.environ.get("REPRO_FAST", "0") not in ("0", "")
+
+#: Throughput the predicted config must hold vs the probed config where
+#: the two disagree (asserted).
+MIN_AGREEMENT_TPUT = 0.9
+
+
+def _build_entries(key, rng):
+    entries = {}
+    for name, model, dim in (("KWS-FINN", KWSMLP(), 490),
+                             ("AD-hls4ml", ADAutoencoder(), 128)):
+        cm = _compile_mlp(model, key)
+        mk = (lambda d: lambda i: rng.integers(
+            -127, 128, (d,)).astype(np.int32))(dim)
+        entries[name] = (cm, mk)
+    if not FAST:
+        for name, model in (("IC-hls4ml", ICModel()),
+                            ("IC-FINN-CNV", CNVModel())):
+            cm = _compile_conv(model, key, rng)
+            hw, ch = model.in_hw, model.in_ch
+            mk = (lambda h, c: lambda i: rng.integers(
+                -127, 128, (h, h, c)).astype(np.int32))(hw, ch)
+            entries[name] = (cm, mk)
+    return entries
+
+
+def _traced_records(name, cm, mk, micro_batch, n_queries):
+    """One traced server run at a forced wave size -> labeled trace rows
+    (the obs bench's harvest, retagged with the family name — the router
+    registers every model under the lane key)."""
+    tracer = Tracer()
+    cm.set_tracer(tracer)
+    service = ServiceModel.from_compiled(cm, probe_batch=8)
+    service = service.recalibrated(
+        measure_wave_service_s(cm, micro_batch), micro_batch)
+    try:
+        server_streaming(
+            cm, mk, qps=0.7 * service.saturation_qps(micro_batch),
+            n_queries=n_queries, seed=7,
+            max_wait_ms=max(2.0, 1.5 * service.wave_service_s(micro_batch)
+                            * 1e3),
+            micro_batch=micro_batch, service_model=service, tracer=tracer)
+    finally:
+        cm.set_tracer(None)
+    records = []
+    for r in prediction_records(tracer):
+        records.append({**r, "model": name, "micro_batch": micro_batch})
+    return records, tracer
+
+
+def run():
+    banner("Cost model: LOMO error vs analytic FIFO + autotune agreement")
+    entries = _build_entries(jax.random.PRNGKey(0),
+                             np.random.default_rng(0))
+    n_queries = 32 if FAST else 64
+    cache = tempfile.mkdtemp(prefix="repro_costmodel_autotune_")
+
+    rows, trace_records, tuned_configs = [], [], []
+    # -- harvest: traced serves at several wave sizes + audit trails ------
+    for name, (cm, mk) in entries.items():
+        cfg = autotune_model(cm, batch=32 if FAST else 64, mode="probe",
+                             directory=cache, force=True)
+        tuned_configs.append(cfg)
+        cm.apply_tuned(cfg)
+        waves = sorted({cfg.micro_batch, max(1, cfg.micro_batch // 4), 32})
+        for mb in waves:
+            recs, tracer = _traced_records(name, cm, mk, mb, n_queries)
+            trace_records.extend(recs)
+            export_prediction_records(
+                tracer, os.path.join(
+                    bench_dir(), f"COSTMODEL_trace_{name}_mb{mb}.jsonl"))
+        rows.append(row(f"costmodel/{name}/harvest", 0.0,
+                        waves=",".join(str(w) for w in waves),
+                        trace_rows=len([r for r in trace_records
+                                        if r["model"] == name]),
+                        tuned_mb=cfg.micro_batch,
+                        segment_mode=cfg.segment_mode))
+
+    resolver = compiled_feature_resolver(
+        {name: cm for name, (cm, mk) in entries.items()})
+    dataset = build_dataset(resolver, trace_records=trace_records,
+                            tuned_configs=tuned_configs)
+    table_path = dataset.save(os.path.join(bench_dir(),
+                                           "COSTMODEL_dataset.json"))
+    doc = {"fast": FAST, "n_rows": len(dataset.rows),
+           "models": dataset.models(), "dataset_path": table_path,
+           "lomo": {}, "agreement": {}}
+
+    # -- LOMO: the learned model vs the analytic baseline (asserted) ------
+    lomo = leave_one_model_out(dataset.rows, l2=1e-2, seed=0, n_members=8)
+    doc["lomo"] = lomo
+    for held, stats in sorted(lomo.items()):
+        if held == "overall":
+            continue
+        rows.append(row(
+            f"costmodel/{held}/lomo", 0.0, n=stats["n"],
+            learned_med=f"{stats['median_abs_rel_err']:.3f}",
+            analytic_med=(f"{stats['analytic_median_abs_rel_err']:.3f}"
+                          if "analytic_median_abs_rel_err" in stats
+                          else "-")))
+    overall = lomo["overall"]
+    rows.append(row(
+        "costmodel/overall/lomo", 0.0, n=overall["n"],
+        learned_med=f"{overall['median_abs_rel_err']:.3f}",
+        analytic_med=f"{overall['analytic_median_abs_rel_err']:.3f}"))
+    assert (overall["median_abs_rel_err"]
+            <= overall["analytic_median_abs_rel_err"]), (
+        f"learned LOMO median abs rel err "
+        f"{overall['median_abs_rel_err']:.3f} worse than the analytic "
+        f"FIFO model's {overall['analytic_median_abs_rel_err']:.3f} — "
+        "the predictor no longer beats the baseline it trains against")
+
+    # -- agreement: probe-mode vs model-mode autotune (asserted) ----------
+    predictor = WaveCostPredictor.fit_rows(dataset.rows, l2=1e-2, seed=0,
+                                           n_members=8)
+    for name, (cm, mk) in entries.items():
+        probed = load_config(schedule_key(cm), directory=cache)
+        predicted = autotune_model(cm, batch=32 if FAST else 64,
+                                   mode="model", predictor=predictor,
+                                   directory=tempfile.mkdtemp(
+                                       prefix="repro_costmodel_model_"),
+                                   force=True)
+        match = (probed.micro_batch == predicted.micro_batch
+                 and probed.segment_mode == predicted.segment_mode)
+        entry = {
+            "probed": {"micro_batch": probed.micro_batch,
+                       "segment_mode": probed.segment_mode},
+            "predicted": {"micro_batch": predicted.micro_batch,
+                          "segment_mode": predicted.segment_mode},
+            "config_match": match,
+        }
+        if match:
+            entry["throughput_ratio"] = 1.0   # identical config, by
+            # construction — re-timing the same program twice would only
+            # measure machine noise
+        else:
+            batch = 64
+            x = None
+            from repro.deploy.autotune import default_sample
+
+            x = default_sample(cm, batch)
+            t = {}
+            for label, cfg in (("probed", probed),
+                               ("predicted", predicted)):
+                cm.apply_tuned(cfg)
+                t[label] = probe_streaming(cm, x, cfg.micro_batch, iters=3)
+            cm.apply_tuned(probed)
+            entry["throughput_ratio"] = t["probed"] / t["predicted"]
+        doc["agreement"][name] = entry
+        rows.append(row(
+            f"costmodel/{name}/agreement", 0.0,
+            probed_mb=probed.micro_batch, predicted_mb=predicted.micro_batch,
+            probed_mode=probed.segment_mode,
+            predicted_mode=predicted.segment_mode,
+            match=match, tput_ratio=f"{entry['throughput_ratio']:.3f}",
+            source=predicted.source))
+        assert entry["throughput_ratio"] >= MIN_AGREEMENT_TPUT, (
+            f"{name}: predicted config holds only "
+            f"{entry['throughput_ratio']:.2f}x of the probed config's "
+            f"throughput (< {MIN_AGREEMENT_TPUT}) — the probe-free mode "
+            "is leaving performance on the table")
+
+    print_rows(rows)
+    emit_json("BENCH_costmodel.json", doc)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

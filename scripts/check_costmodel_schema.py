@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Lint: the shipped cost-model artifact matches the live feature schema.
+
+``repro.costmodel`` ships a committed default predictor artifact
+(``src/repro/costmodel/artifacts/default.json``) so probe-free autotuning
+and cold-start admission work out of the box. The artifact embeds the
+feature schema it was trained against; if ``features.py`` evolves (a
+feature added, renamed, or reordered) without retraining and recommitting
+the artifact, every load would raise at runtime — in whatever process
+happens to call ``load_default()`` first. This check moves that failure
+to CI:
+
+  * the artifact parses and its ``schema_version`` / ``feature_names``
+    match ``repro.costmodel.features`` exactly (order included — the
+    weight vector is positional);
+  * the loaded predictor produces a finite, positive prediction on a
+    canonical feature point (weights are not NaN/garbage);
+  * prediction is deterministic (two calls, identical bits).
+
+Regenerate after a schema change with
+``python -c "from repro.costmodel import make_default_artifact;
+make_default_artifact()"``.
+
+Usage: python scripts/check_costmodel_schema.py [root]
+Exits 0 when clean, 1 with the mismatch listing otherwise.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(root, "src"))
+
+    from repro.costmodel.features import (FEATURE_NAMES,
+                                          FEATURE_SCHEMA_VERSION,
+                                          features_from_costs)
+    from repro.costmodel.model import WaveCostPredictor, default_artifact_path
+
+    errors = []
+    path = default_artifact_path()
+    if not os.path.exists(path):
+        print(f"check_costmodel_schema: missing artifact {path}")
+        return 1
+
+    with open(path, encoding="utf-8") as f:
+        raw = json.load(f)
+    if raw.get("schema_version") != FEATURE_SCHEMA_VERSION:
+        errors.append(
+            f"schema_version {raw.get('schema_version')} != live "
+            f"{FEATURE_SCHEMA_VERSION}")
+    if tuple(raw.get("feature_names", ())) != tuple(FEATURE_NAMES):
+        errors.append(
+            f"feature_names {raw.get('feature_names')} != live "
+            f"{list(FEATURE_NAMES)} (order matters: weights are positional)")
+
+    if not errors:
+        predictor = WaveCostPredictor.load(path)
+        feats = features_from_costs(
+            wave_cycles=4096, micro_batch=16, bops=1 << 24,
+            traffic_bytes=1 << 16, param_bytes=1 << 15, n_stages=4)
+        a = float(predictor.predict_ms(feats))
+        b = float(predictor.predict_ms(feats))
+        if not (math.isfinite(a) and a > 0):
+            errors.append(f"prediction on canonical point not finite/"
+                          f"positive: {a}")
+        if a != b:
+            errors.append(f"prediction not deterministic: {a} != {b}")
+
+    if errors:
+        print("check_costmodel_schema: shipped artifact out of sync with "
+              "repro.costmodel.features (retrain via make_default_artifact):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("check_costmodel_schema: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

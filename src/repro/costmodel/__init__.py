@@ -1,0 +1,65 @@
+"""repro.costmodel — learned wave-cost predictor (ROADMAP direction 5).
+
+The autotuner and the SLO admission controller both need to know how long
+one wave of a model takes on a platform. Nine PRs of infrastructure answer
+that with *measured probes* per (model, platform) — fine for four Table-1
+models, wrong for a fleet of hundreds of exported variants. This package
+closes the rule4ml loop: a deterministic feature extractor over the static
+compiled structure (`features`), a reproducible training table harvested
+from the observability traces and autotune audit trails the stack already
+emits (`dataset`), and a small seedable pure-numpy predictor with save/load
+artifacts (`model`). Consumers: ``REPRO_AUTOTUNE=model`` (probe-free
+autotuning, ``deploy.autotune``), cold-start admission pricing
+(``serve.slo.PredictedServiceModel``), and predictor-evaluated codesign
+sweeps (``core.search.predictor_sweep``). See ``docs/costmodel.md``.
+"""
+
+from repro.costmodel.features import (
+    FEATURE_NAMES,
+    FEATURE_SCHEMA_VERSION,
+    feature_vector,
+    features_from_costs,
+    features_from_model_cost,
+    wave_features,
+)
+from repro.costmodel.dataset import (
+    DATASET_SCHEMA_VERSION,
+    Dataset,
+    build_dataset,
+    compiled_feature_resolver,
+    load_trace_records,
+    rows_from_bench_doc,
+    rows_from_trace_records,
+    rows_from_tuned_config,
+)
+from repro.costmodel.model import (
+    WaveCostPredictor,
+    bootstrap_rows,
+    default_artifact_path,
+    leave_one_model_out,
+    load_default,
+    make_default_artifact,
+)
+
+__all__ = [
+    "FEATURE_NAMES",
+    "FEATURE_SCHEMA_VERSION",
+    "feature_vector",
+    "features_from_costs",
+    "features_from_model_cost",
+    "wave_features",
+    "DATASET_SCHEMA_VERSION",
+    "Dataset",
+    "build_dataset",
+    "compiled_feature_resolver",
+    "load_trace_records",
+    "rows_from_bench_doc",
+    "rows_from_trace_records",
+    "rows_from_tuned_config",
+    "WaveCostPredictor",
+    "bootstrap_rows",
+    "default_artifact_path",
+    "leave_one_model_out",
+    "load_default",
+    "make_default_artifact",
+]

@@ -34,6 +34,7 @@ exported graph runs — just not fused.
 
 from repro.deploy.autotune import (  # noqa: F401
     TunedConfig,
+    autotune_mode,
     autotune_model,
     load_config,
     save_config,

@@ -28,13 +28,30 @@ before you build):
 The winning ``TunedConfig`` is cached as a JSON artifact per
 (model, platform) so compile_graph / the scenario benchmarks consume the
 tuned numbers instead of constants, and the choice is reproducible across
-runs. Knobs:
+runs. Two search modes share the model half:
 
-  * ``REPRO_AUTOTUNE=0``          — disable (compile_graph(autotune=True)
+  * **probe** (default) — the measured refinements above run; every probe
+    lands in the audit trail (and from there in the costmodel training
+    table). Schema v4 adds the ``block_mn`` measured refinement at the
+    winning micro-batch, mirroring the megakernel probe.
+  * **model** (``REPRO_AUTOTUNE=model``) — probe-FREE: the learned wave-
+    cost predictor (``repro.costmodel``, trained on exactly those audit
+    trails plus serve traces) ranks micro-batch and megakernel-vs-staged;
+    block_h/block_mn stay pure-model. Zero wall-clock reads, fully
+    deterministic, and the resulting config records ``source:
+    "predicted"`` so downstream consumers can tell the provenance apart.
+
+Knobs (``autotune_mode()`` — an explicit tri-state, unknown values are an
+error rather than silently enabling probes):
+
+  * ``REPRO_AUTOTUNE=off|0``      — disable (compile_graph(autotune=True)
     becomes a no-op; defaults are used)
+  * ``REPRO_AUTOTUNE=probe|1``    — model-ranked, measured-probe-refined
+  * ``REPRO_AUTOTUNE=model``      — probe-free via the learned predictor
   * ``REPRO_AUTOTUNE_CACHE=dir``  — cache directory (default
     ``.repro_autotune``)
   * ``REPRO_AUTOTUNE_FORCE=1``    — ignore the cache and re-search
+  * ``REPRO_COSTMODEL_ARTIFACT``  — predictor artifact for model mode
 """
 
 from __future__ import annotations
@@ -53,8 +70,9 @@ from repro.deploy.lower import FusedConvThresholdStage, FusedThresholdStage
 from repro.obs import timer as obs_timer
 from repro.obs.tracer import NULL_TRACER
 
-CONFIG_VERSION = 3   # v3: + megakernel/staged segment_mode (older caches
-                     # re-search; v2 added dense block_m/block_n)
+CONFIG_VERSION = 4   # v4: + source provenance (probed|predicted) and the
+                     # block_mn measured-probe audit trail (older caches
+                     # re-search; v3 added segment_mode, v2 block_m/block_n)
 
 #: Candidate micro-batch sizes (powers of two; filtered to <= batch).
 MICRO_CANDIDATES = (1, 2, 4, 8, 16, 32, 64)
@@ -72,8 +90,33 @@ VMEM_BUDGET_BYTES = 1 << 21
 TARGET_ROWS = 256
 
 
+#: Spellings the tri-state accepts; anything else raises — a typo like
+#: ``REPRO_AUTOTUNE=modle`` must not silently fall back to probing.
+_MODE_SPELLINGS = {
+    "off": ("off", "0", "", "false", "no", "none", "disable", "disabled"),
+    "probe": ("probe", "1", "on", "true", "yes", "probed", "measure"),
+    "model": ("model", "predict", "predicted", "predictor"),
+}
+
+
+def autotune_mode() -> str:
+    """Explicit tri-state from ``REPRO_AUTOTUNE``: off | probe | model.
+
+    Replaces the old truthy check, under which ``REPRO_AUTOTUNE=model``
+    would have been misread as plain-enabled probing by every call site.
+    Unknown spellings are a hard error, never a silent default.
+    """
+    raw = os.environ.get("REPRO_AUTOTUNE", "probe").strip().lower()
+    for mode, spellings in _MODE_SPELLINGS.items():
+        if raw in spellings:
+            return mode
+    raise ValueError(
+        f"REPRO_AUTOTUNE={raw!r}: expected off|probe|model "
+        "(see deploy.autotune docstring)")
+
+
 def autotune_enabled() -> bool:
-    return os.environ.get("REPRO_AUTOTUNE", "1") not in ("0", "")
+    return autotune_mode() != "off"
 
 
 def autotune_force() -> bool:
@@ -106,8 +149,10 @@ class TunedConfig:
     block_mn_model: Dict[str, Dict] = dataclasses.field(default_factory=dict)
     segment_mode: str = "staged"      # "megakernel" | "staged" dispatch
     segment_mode_model: Dict = dataclasses.field(default_factory=dict)
+    block_mn_probe: Dict = dataclasses.field(default_factory=dict)
     seed_stage_ms: Optional[List[Dict]] = None   # stage_latencies seed
     probe_ms: Optional[Dict[str, float]] = None  # micro_batch -> median ms
+    source: str = "probed"            # "probed" | "predicted" provenance
     version: int = CONFIG_VERSION
 
     def to_dict(self) -> Dict:
@@ -367,7 +412,9 @@ def autotune_model(cm, batch: int = 64,
                    sample: Optional[jnp.ndarray] = None,
                    directory: Optional[str] = None,
                    force: Optional[bool] = None,
-                   tracer=None) -> TunedConfig:
+                   tracer=None,
+                   mode: Optional[str] = None,
+                   predictor=None) -> TunedConfig:
     """Search (or load from cache) the TunedConfig for one compiled model.
 
     ``probe(cm, x, micro_batch) -> seconds`` overrides the wall-clock
@@ -375,12 +422,30 @@ def autotune_model(cm, batch: int = 64,
     deterministic (the model half always is). ``batch`` is the reference
     Offline pool the FIFO simulation prices.
 
+    ``mode`` selects the search flavor: "probe" (measured refinement, the
+    default) or "model" (probe-FREE — the ``repro.costmodel`` predictor
+    ranks micro-batch and segment dispatch; zero wall-clock reads, zero
+    model executions; the config records ``source: "predicted"``).
+    ``None`` follows ``REPRO_AUTOTUNE``, with "off" read as "probe" — a
+    direct call means the caller wants a search. ``predictor`` defaults to
+    the shipped artifact (``repro.costmodel.load_default``).
+
     Each measured probe lands as a ``probe`` span (cat ``autotune``) on
     the tracer — ``tracer=`` or, by default, the model's own — carrying
     the candidate's modeled-vs-probed numbers, so the search's audit trail
     is visible on the same timeline as the serving it tunes.
     """
     tr = tracer if tracer is not None else getattr(cm, "tracer", NULL_TRACER)
+    if mode is None:
+        mode = autotune_mode()
+        if mode == "off":
+            mode = "probe"
+    if mode not in ("probe", "model"):
+        raise ValueError(f"autotune mode {mode!r}: expected probe|model")
+    if mode == "model" and predictor is None:
+        from repro.costmodel.model import load_default
+
+        predictor = load_default()
     key = schedule_key(cm)
     if not (autotune_force() if force is None else force):
         cached = load_config(key, directory)
@@ -407,36 +472,54 @@ def autotune_model(cm, batch: int = 64,
     modeled.sort(key=lambda d: (d["modeled_cycles"], d["micro_batch"]))
     top = modeled[:max(1, topk)]
 
-    # -- measured refinement on the top candidates -----------------------
     seed_stage_ms = None
     probe_ms: Dict[str, float] = {}
-    x = default_sample(cm, batch) if sample is None else sample
-    if probe is None:
-        # stage_latencies seeds the refinement: a cheap service-time
-        # estimate decides how many probe repetitions noise requires
-        seed_stage_ms = cm.stage_latencies(x[:min(batch, 8)])
-        service_ms = sum(s["ms"] for s in seed_stage_ms)
-        iters = 5 if service_ms < 5.0 else (3 if service_ms < 50.0 else 1)
-        probe_fn = lambda c, xx, mb: probe_streaming(c, xx, mb, iters=iters)
-    else:
-        probe_fn = probe
-    for cand in top:
-        mb = cand["micro_batch"]
-        t0 = obs_timer.now() if tr.enabled else 0.0
-        t = float(probe_fn(cm, x, mb))
-        probe_ms[str(mb)] = t * 1e3
-        cand["probe_ms"] = t * 1e3
-        if tr.enabled:
-            tr.add_span("probe", t0, obs_timer.now(), cat="autotune",
-                        args={"key": key, "micro_batch": mb,
-                              "n_micro": cand["n_micro"],
-                              "modeled_cycles": cand["modeled_cycles"],
-                              "probe_ms": t * 1e3})
+    probe_fn = None
+    x = None
+    if mode == "model":
+        # -- probe-free: the learned predictor prices EVERY candidate ----
+        # (scoring is arithmetic, so there is no reason to stop at top-k);
+        # total pool drain = waves x predicted per-wave service
+        from repro.costmodel.features import wave_features
 
-    winner = min(top, key=lambda d: (d.get("probe_ms", float("inf")),
-                                     d["modeled_cycles"]))
+        for cand in modeled:
+            wave_ms = float(predictor.predict_ms(
+                wave_features(cm, cand["micro_batch"])))
+            cand["predicted_wave_ms"] = wave_ms
+            cand["predicted_total_ms"] = wave_ms * cand["n_micro"]
+        winner = min(modeled, key=lambda d: (d["predicted_total_ms"],
+                                             d["micro_batch"]))
+    else:
+        # -- measured refinement on the top candidates -------------------
+        x = default_sample(cm, batch) if sample is None else sample
+        if probe is None:
+            # stage_latencies seeds the refinement: a cheap service-time
+            # estimate decides how many probe repetitions noise requires
+            seed_stage_ms = cm.stage_latencies(x[:min(batch, 8)])
+            service_ms = sum(s["ms"] for s in seed_stage_ms)
+            iters = 5 if service_ms < 5.0 else (3 if service_ms < 50.0
+                                                else 1)
+            probe_fn = lambda c, xx, mb: probe_streaming(c, xx, mb,
+                                                         iters=iters)
+        else:
+            probe_fn = probe
+        for cand in top:
+            mb = cand["micro_batch"]
+            t0 = obs_timer.now() if tr.enabled else 0.0
+            t = float(probe_fn(cm, x, mb))
+            probe_ms[str(mb)] = t * 1e3
+            cand["probe_ms"] = t * 1e3
+            if tr.enabled:
+                tr.add_span("probe", t0, obs_timer.now(), cat="autotune",
+                            args={"key": key, "micro_batch": mb,
+                                  "n_micro": cand["n_micro"],
+                                  "modeled_cycles": cand["modeled_cycles"],
+                                  "probe_ms": t * 1e3})
+
+        winner = min(top, key=lambda d: (d.get("probe_ms", float("inf")),
+                                         d["modeled_cycles"]))
     if tr.enabled:
-        tr.instant("autotune_winner", cat="autotune", key=key,
+        tr.instant("autotune_winner", cat="autotune", key=key, mode=mode,
                    micro_batch=int(winner["micro_batch"]),
                    modeled_cycles=int(winner["modeled_cycles"]))
 
@@ -453,6 +536,44 @@ def autotune_model(cm, batch: int = 64,
                                  wave_rows=int(winner["micro_batch"]))
             block_mn[s.name] = [plan["block_m"], plan["block_n"]]
             block_mn_model[s.name] = plan
+
+    # -- dense blocks: measured refinement at the winning wave ------------
+    # (mirrors the megakernel probe: model ranks, one probe pair decides,
+    # ties break toward the model's pick; the probe pair lands in the
+    # audit trail and from there in the costmodel training table).
+    # ``apply_tuned`` discipline applies: the jit segment programs close
+    # over the stage blocks at trace time, so every flip must _rebuild().
+    block_mn_probe: Dict = {}
+    if mode == "probe" and block_mn:
+        wave = int(winner["micro_batch"])
+        saved_blocks = {s.name: (s.block_m, s.block_n)
+                        for s in cm.schedule.stages
+                        if isinstance(s, FusedThresholdStage)}
+        try:
+            t_default = float(probe_fn(cm, x, wave))
+            for s in cm.schedule.stages:
+                if isinstance(s, FusedThresholdStage) and s.name in block_mn:
+                    s.block_m, s.block_n = block_mn[s.name]
+            cm._rebuild()
+            t_tuned = float(probe_fn(cm, x, wave))
+        finally:
+            for s in cm.schedule.stages:
+                if isinstance(s, FusedThresholdStage):
+                    s.block_m, s.block_n = saved_blocks[s.name]
+            cm._rebuild()
+        pick = "tuned" if t_tuned <= t_default else "default"
+        block_mn_probe = {
+            "wave_rows": wave, "n_micro": -(-batch // wave),
+            "probe_ms": {"tuned": t_tuned * 1e3,
+                         "default": t_default * 1e3},
+            "pick": pick,
+        }
+        if pick == "default":
+            block_mn = {}
+        if tr.enabled:
+            tr.instant("block_mn_probe", cat="autotune", key=key,
+                       pick=pick, tuned_ms=t_tuned * 1e3,
+                       default_ms=t_default * 1e3)
 
     # -- segment dispatch: megakernel vs staged ---------------------------
     # Model first: the staged lax.map re-streams every stage's weights and
@@ -484,20 +605,34 @@ def autotune_model(cm, batch: int = 64,
             "bytes_saved": float(staged_b - mega_b),
         }
         model_pick = "megakernel" if mega_b <= staged_b else "staged"
-        prev_mode = cm.megakernel
-        try:
-            cm.set_megakernel(True)
-            t_mega = float(probe_fn(cm, x, wave))
-            cm.set_megakernel(False)
-            t_staged = float(probe_fn(cm, x, wave))
-        finally:
-            cm.set_megakernel(prev_mode)
-        segment_mode_model["probe_ms"] = {"megakernel": t_mega * 1e3,
-                                          "staged": t_staged * 1e3}
-        if t_mega < t_staged:
-            segment_mode = "megakernel"
-        elif t_mega == t_staged:
-            segment_mode = model_pick
+        if mode == "model":
+            from repro.costmodel.features import wave_features
+
+            p_mega = float(predictor.predict_ms(
+                wave_features(cm, wave, "megakernel")))
+            p_staged = float(predictor.predict_ms(
+                wave_features(cm, wave, "staged")))
+            segment_mode_model["predicted_ms"] = {"megakernel": p_mega,
+                                                  "staged": p_staged}
+            if p_mega < p_staged:
+                segment_mode = "megakernel"
+            elif p_mega == p_staged:
+                segment_mode = model_pick
+        else:
+            prev_mode = cm.megakernel
+            try:
+                cm.set_megakernel(True)
+                t_mega = float(probe_fn(cm, x, wave))
+                cm.set_megakernel(False)
+                t_staged = float(probe_fn(cm, x, wave))
+            finally:
+                cm.set_megakernel(prev_mode)
+            segment_mode_model["probe_ms"] = {"megakernel": t_mega * 1e3,
+                                              "staged": t_staged * 1e3}
+            if t_mega < t_staged:
+                segment_mode = "megakernel"
+            elif t_mega == t_staged:
+                segment_mode = model_pick
         segment_mode_model["model_pick"] = model_pick
         if tr.enabled:
             tr.instant("segment_mode", cat="autotune", key=key,
@@ -531,8 +666,10 @@ def autotune_model(cm, batch: int = 64,
         block_mn_model=block_mn_model,
         segment_mode=segment_mode,
         segment_mode_model=segment_mode_model,
+        block_mn_probe=block_mn_probe,
         seed_stage_ms=seed_stage_ms,
         probe_ms=probe_ms or None,
+        source="predicted" if mode == "model" else "probed",
     )
     save_config(cfg, directory)
     return cfg

@@ -637,10 +637,11 @@ def compile_graph(graph: Graph, in_scale: float = 1.0 / 127.0,
     if tuned is not None:
         cm.apply_tuned(tuned)
     elif autotune:
-        from repro.deploy.autotune import autotune_enabled, autotune_model
+        from repro.deploy.autotune import autotune_mode, autotune_model
 
-        if autotune_enabled():
-            cm.apply_tuned(autotune_model(cm))
+        mode = autotune_mode()
+        if mode != "off":
+            cm.apply_tuned(autotune_model(cm, mode=mode))
     return cm
 
 

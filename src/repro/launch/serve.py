@@ -57,10 +57,21 @@ def _run_tiny(args):
                         meta={"model": type(model).__name__},
                         freeze_scales=True, in_scale=in_scale)
     cm = compile_graph(graph, in_scale=in_scale, use_pallas=False)
-    cm.apply_tuned(autotune_model(cm, batch=32))
+    if args.autotune != "off":
+        cm.apply_tuned(autotune_model(cm, batch=32, mode=args.autotune))
     mb = cm.default_micro_batch
-    service = ServiceModel.from_compiled(cm, probe_batch=mb).recalibrated(
-        measure_wave_service_s(cm, mb), mb)
+    if args.autotune == "model":
+        # cold-start path: no wall-clock reads before the first request —
+        # the learned predictor prices admission from wave 0 and the
+        # router's EWMA corrects it online (docs/costmodel.md)
+        from repro.costmodel import load_default
+        from repro.serve import PredictedServiceModel
+
+        service = PredictedServiceModel.from_predictor(load_default(), cm)
+    else:
+        service = ServiceModel.from_compiled(
+            cm, probe_batch=mb).recalibrated(
+                measure_wave_service_s(cm, mb), mb)
     engine = AsyncEngine() if args.engine == "async" else SyncEngine()
 
     # every replica slot shares the one compiled executor: submit_wave is
@@ -100,6 +111,12 @@ def main(argv=None):
                     help="lm: continuous-batching ServeEngine; tiny: "
                          "compiled Table-1 model through the serve router")
     ap.add_argument("--tiny-model", choices=("kws", "ad"), default="kws")
+    ap.add_argument("--autotune", choices=("off", "probe", "model"),
+                    default="probe",
+                    help="tiny stack tuning: probe = measured search, "
+                         "model = probe-free learned cost model (cold-"
+                         "start admission priced by the predictor), "
+                         "off = compiled defaults")
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--engine", choices=("sync", "async"), default="sync")
     ap.add_argument("--qps", type=float, default=0.0,

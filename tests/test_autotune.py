@@ -12,6 +12,7 @@ import os
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core.qir import export_qcnn, export_qmlp
 from repro.deploy import FusedConvThresholdStage, compile_graph
@@ -20,6 +21,7 @@ from repro.deploy.autotune import (
     TunedConfig,
     VMEM_BUDGET_BYTES,
     autotune_enabled,
+    autotune_mode,
     autotune_model,
     block_h_candidates,
     config_path,
@@ -236,6 +238,32 @@ def test_slo_micro_batch_grows_with_the_budget():
             sorted(c["micro_batch"] for c in p["candidates"])
 
 
+def test_autotune_mode_tri_state_parsing(monkeypatch):
+    """Every documented spelling resolves to its mode; unknown spellings
+    are a hard error (a typo must never silently fall back to probing)."""
+    cases = {
+        "off": ("off", "0", "", "false", "no", "none", "disable",
+                "disabled", "OFF", " Off "),
+        "probe": ("probe", "1", "on", "true", "yes", "probed", "measure"),
+        "model": ("model", "predict", "predicted", "predictor", "MODEL"),
+    }
+    for want, spellings in cases.items():
+        for raw in spellings:
+            monkeypatch.setenv("REPRO_AUTOTUNE", raw)
+            assert autotune_mode() == want, raw
+            assert autotune_enabled() == (want != "off")
+    monkeypatch.delenv("REPRO_AUTOTUNE")
+    assert autotune_mode() == "probe"        # the historical default
+    for bad in ("modle", "2", "maybe", "model "):
+        monkeypatch.setenv("REPRO_AUTOTUNE", bad.upper() + "x")
+        with pytest.raises(ValueError, match="REPRO_AUTOTUNE"):
+            autotune_mode()
+    # the error propagates through the compile_graph gate too
+    monkeypatch.setenv("REPRO_AUTOTUNE", "modle")
+    with pytest.raises(ValueError, match="off|probe|model"):
+        autotune_enabled()
+
+
 def test_compile_graph_autotune_flag_and_env_knobs(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
     cm = _mlp_compiled()
@@ -263,17 +291,23 @@ def test_compile_graph_autotune_flag_and_env_knobs(tmp_path, monkeypatch):
     assert cm3.tuned == cm1.tuned
 
 
-def test_autotune_segment_mode_v3_persisted_and_bit_exact(tmp_path):
-    """v3 configs carry the megakernel/staged dispatch choice: on the MLP
-    the residency planner admits a fused run, deterministic probes tie,
-    and the traffic model breaks the tie toward the megakernel (it can
-    only save bytes). Applying the config flips the executor's dispatch
-    without changing any integers."""
+def test_autotune_segment_mode_persisted_and_bit_exact(tmp_path):
+    """The config carries the megakernel/staged dispatch choice: on the
+    MLP the residency planner admits a fused run, deterministic probes
+    tie, and the traffic model breaks the tie toward the megakernel (it
+    can only save bytes). Applying the config flips the executor's
+    dispatch without changing any integers."""
     cm = _mlp_compiled()
     probe = _fixed_probe({mb: 0.005 for mb in (1, 2, 4, 8, 16, 32, 64)})
     cfg = autotune_model(cm, batch=16, probe=probe,
                          directory=str(tmp_path), force=True)
-    assert cfg.version == CONFIG_VERSION == 3
+    assert cfg.version == CONFIG_VERSION == 4
+    assert cfg.source == "probed"
+    # v4's measured block_mn refinement ran at the winning wave size and
+    # its probe pair landed in the audit trail (ties keep the model pick)
+    assert cfg.block_mn_probe["pick"] == "tuned"
+    assert cfg.block_mn_probe["wave_rows"] == cfg.micro_batch
+    assert set(cfg.block_mn_probe["probe_ms"]) == {"tuned", "default"}
     assert cfg.segment_mode == "megakernel"
     m = cfg.segment_mode_model
     assert m["plans"] and m["model_pick"] == "megakernel"

@@ -1,0 +1,425 @@
+"""Learned wave-cost predictor: feature schema, dataset determinism,
+probe-free autotuning, and predictor-priced cold-start admission.
+
+The contract under test is ROADMAP direction 5's loop: deterministic
+features from static structure -> byte-reproducible training table ->
+seedable predictor artifact -> zero-probe ``REPRO_AUTOTUNE=model`` configs
+that are bit-exact at execution -> a ``PredictedServiceModel`` that prices
+admission for a model the server has never measured, as an exact
+discrete-event simulation under ``ManualClock``.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.qir import export_qmlp
+from repro.costmodel import (
+    FEATURE_NAMES,
+    FEATURE_SCHEMA_VERSION,
+    Dataset,
+    WaveCostPredictor,
+    bootstrap_rows,
+    build_dataset,
+    compiled_feature_resolver,
+    feature_vector,
+    features_from_model_cost,
+    leave_one_model_out,
+    load_trace_records,
+    rows_from_tuned_config,
+    wave_features,
+)
+from repro.deploy import compile_graph
+from repro.deploy.autotune import (
+    CONFIG_VERSION,
+    TunedConfig,
+    autotune_model,
+    load_config,
+    save_config,
+)
+from repro.models.tiny import KWSMLP
+from repro.serve import (
+    AsyncEngine,
+    ManualClock,
+    PredictedServiceModel,
+    Router,
+    RouterConfig,
+    SLOController,
+    poisson_trace,
+)
+from repro.serve.sim import scripted_pool
+
+IN_SCALE = 1.0 / 127.0
+
+
+def _mlp_compiled(width=16):
+    model = KWSMLP(width=width)
+    params = model.init(jax.random.PRNGKey(0))
+    hidden_defs, _ = model.layers()
+    graph = export_qmlp(hidden_defs, params["hidden"], params["head"],
+                        meta={"model": "KWS"}, freeze_scales=True,
+                        in_scale=IN_SCALE)
+    return compile_graph(graph, in_scale=IN_SCALE, use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# features: versioned schema, pure function of structure
+# ---------------------------------------------------------------------------
+
+def test_wave_features_schema_and_determinism():
+    cm = _mlp_compiled()
+    a = wave_features(cm, 16)
+    b = wave_features(cm, 16)
+    assert a == b                          # pure arithmetic, no clocks/RNG
+    assert tuple(a) == FEATURE_NAMES       # exact schema, exact order
+    v = feature_vector(a)
+    assert v.shape == (len(FEATURE_NAMES),)
+    assert np.all(np.isfinite(v))
+    # wave size is a real input, not a constant column
+    assert wave_features(cm, 64) != a
+    # a missing feature is a KeyError, never a silent zero
+    broken = dict(a)
+    del broken["log_wave_cycles"]
+    with pytest.raises(KeyError):
+        feature_vector(broken)
+
+
+def test_wave_features_segment_mode_independent_of_model_state():
+    """Scoring "megakernel" vs "staged" must not depend on (or mutate) the
+    dispatch mode the executor object currently happens to be in — that is
+    what lets model-mode autotune rank both flavors probe-free."""
+    cm = _mlp_compiled()
+    mega = wave_features(cm, 16, "megakernel")
+    staged = wave_features(cm, 16, "staged")
+    assert staged["log_residency_bytes"] == 0.0
+    assert staged["megakernel"] == 0.0
+    assert mega["megakernel"] == 1.0
+    assert mega["log_residency_bytes"] > 0.0
+    # the fused wave streams fewer bytes — the traffic model's whole point
+    assert mega["log_wave_traffic_bytes"] < staged["log_wave_traffic_bytes"]
+    cm.set_megakernel(False)
+    assert wave_features(cm, 16, "megakernel") == mega
+    assert wave_features(cm, 16) == staged     # None follows current mode
+    cm.set_megakernel(True)
+    assert wave_features(cm, 16, "staged") == staged
+
+
+def test_features_from_model_cost_covers_schema():
+    from repro.core.bops import ModelCost, dense_cost
+
+    mc = ModelCost([dense_cost("d0", 490, 128), dense_cost("d1", 128, 10)])
+    feats = features_from_model_cost(mc, 8)
+    assert tuple(feats) == FEATURE_NAMES
+    assert feats["n_stages"] == 2.0
+    assert np.all(np.isfinite(feature_vector(feats)))
+
+
+# ---------------------------------------------------------------------------
+# dataset: byte-identical determinism
+# ---------------------------------------------------------------------------
+
+def _fake_trace_records(n=6):
+    return [{"model": "KWS", "platform": "cpu", "micro_batch": 4 * (i % 3 + 1),
+             "n_valid": 4, "predicted_ms": 1.0 + 0.1 * i,
+             "measured_ms": 1.2 + 0.1 * i} for i in range(n)]
+
+
+def test_dataset_builder_is_byte_identical_under_input_order(tmp_path):
+    cm = _mlp_compiled()
+    resolver = compiled_feature_resolver({"KWS": cm})
+    records = _fake_trace_records()
+    a = build_dataset(resolver, trace_records=records)
+    b = build_dataset(resolver, trace_records=list(reversed(records)))
+    assert a.to_json_str() == b.to_json_str()
+    p1 = a.save(str(tmp_path / "a.json"))
+    p2 = b.save(str(tmp_path / "b.json"))
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+    # load -> save round-trips byte-identically too
+    assert Dataset.load(p1).to_json_str() == a.to_json_str()
+    # rows name the analytic baseline column from the trace
+    assert all(r["analytic_ms"] is not None and r["source"] == "trace"
+               for r in a.rows)
+    # unknown models are skipped by the resolver, not crashed on
+    ghost = dict(records[0], model="never-compiled")
+    assert build_dataset(resolver,
+                         trace_records=[ghost]).rows == []
+
+
+def test_dataset_load_rejects_foreign_schema(tmp_path):
+    cm = _mlp_compiled()
+    ds = build_dataset(compiled_feature_resolver({"KWS": cm}),
+                       trace_records=_fake_trace_records(2))
+    path = ds.save(str(tmp_path / "ds.json"))
+    doc = json.loads(open(path).read())
+    doc["feature_schema_version"] = FEATURE_SCHEMA_VERSION + 1
+    open(path, "w").write(json.dumps(doc))
+    with pytest.raises(ValueError, match="schema"):
+        Dataset.load(path)
+
+
+def test_trace_jsonl_round_trip(tmp_path):
+    """The JSONL shard path: export -> load -> identical dataset bytes."""
+    from repro.obs import Tracer, export_prediction_records
+
+    tracer = Tracer()
+    for i, r in enumerate(_fake_trace_records(4)):
+        t0 = 0.01 * i
+        tracer.add_span("wave", t0, t0 + r["measured_ms"] / 1e3, cat="serve",
+                        args={"model": r["model"], "platform": r["platform"],
+                              "micro_batch": r["micro_batch"],
+                              "n_valid": r["n_valid"],
+                              "predicted_ms": r["predicted_ms"]})
+    path = export_prediction_records(tracer, str(tmp_path / "t.jsonl"))
+    cm = _mlp_compiled()
+    resolver = compiled_feature_resolver({"KWS": cm})
+    direct = build_dataset(resolver, trace_records=_fake_trace_records(4))
+    via_disk = build_dataset(resolver,
+                             trace_records=load_trace_records(path))
+    # measured_ms goes through the span clock; compare rows field-by-field
+    assert len(via_disk.rows) == len(direct.rows) == 4
+    for a, b in zip(via_disk.rows, direct.rows):
+        assert a["features"] == b["features"]
+        assert a["micro_batch"] == b["micro_batch"]
+        assert a["measured_ms"] == pytest.approx(b["measured_ms"])
+
+
+def test_rows_from_tuned_config_harvests_every_probe(tmp_path):
+    """Probe-mode audit trails become per-wave labeled rows: micro-batch
+    candidates, the segment-mode probe pair, and the block_mn probe pair;
+    model-mode configs contribute no measured rows."""
+    cm = _mlp_compiled()
+    probe = lambda c, x, mb: 0.004 + 0.0001 * mb
+    cfg = autotune_model(cm, batch=16, probe=probe,
+                         directory=str(tmp_path), force=True)
+    resolver = compiled_feature_resolver({"KWS": cm})
+    rows = rows_from_tuned_config(cfg, resolver)
+    sources = {r["source"] for r in rows}
+    assert sources == {"autotune"}
+    probed_mbs = {r["micro_batch"] for r in rows}
+    assert int(cfg.micro_batch) in probed_mbs
+    seg_modes = {r["segment_mode"] for r in rows}
+    assert {"megakernel", "staged"} <= seg_modes  # the probe pair
+    # per-wave normalization: candidate probe_ms spans n_micro waves
+    cand = next(c for c in cfg.candidates
+                if c["micro_batch"] == cfg.micro_batch)
+    per_wave = cand["probe_ms"] / cand["n_micro"]
+    assert any(r["measured_ms"] == pytest.approx(per_wave) for r in rows)
+    # model-mode config: predictions are not measurements
+    predictor = WaveCostPredictor.fit_rows(bootstrap_rows(), l2=1.0, seed=0,
+                                           n_members=2)
+    mcfg = autotune_model(cm, batch=16, mode="model", predictor=predictor,
+                          directory=str(tmp_path / "m"), force=True)
+    assert rows_from_tuned_config(mcfg, resolver) == []
+
+
+# ---------------------------------------------------------------------------
+# predictor: seedable fit, artifact round-trip, LOMO
+# ---------------------------------------------------------------------------
+
+def test_predictor_fit_is_seed_deterministic_and_round_trips(tmp_path):
+    rows = bootstrap_rows()
+    a = WaveCostPredictor.fit_rows(rows, l2=1e-2, seed=7, n_members=4)
+    b = WaveCostPredictor.fit_rows(rows, l2=1e-2, seed=7, n_members=4)
+    np.testing.assert_array_equal(a.weights, b.weights)
+    c = WaveCostPredictor.fit_rows(rows, l2=1e-2, seed=8, n_members=4)
+    assert not np.array_equal(a.weights, c.weights)   # seed is real
+    feats = rows[0]["features"]
+    p = a.predict_ms(feats)
+    assert np.isfinite(p) and p > 0
+    path = a.save(str(tmp_path / "m.json"))
+    loaded = WaveCostPredictor.load(path)
+    assert loaded.predict_ms(feats) == p
+    # matrix scoring agrees with scalar scoring
+    X = np.stack([feature_vector(r["features"]) for r in rows[:5]])
+    np.testing.assert_allclose(
+        a.predict_ms(X), [a.predict_ms(r["features"]) for r in rows[:5]])
+
+
+def test_predictor_artifact_rejects_schema_drift(tmp_path):
+    pred = WaveCostPredictor.fit_rows(bootstrap_rows(), n_members=2)
+    d = pred.to_dict()
+    d["schema_version"] = FEATURE_SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema"):
+        WaveCostPredictor.from_dict(d)
+    d = pred.to_dict()
+    d["feature_names"] = list(reversed(d["feature_names"]))
+    with pytest.raises(ValueError, match="feature names"):
+        WaveCostPredictor.from_dict(d)
+
+
+def test_shipped_default_artifact_loads_and_scores():
+    from repro.costmodel import load_default
+
+    pred = load_default()
+    assert pred.schema_version == FEATURE_SCHEMA_VERSION
+    assert tuple(pred.feature_names) == FEATURE_NAMES
+    cm = _mlp_compiled()
+    p = pred.predict_ms(wave_features(cm, 16))
+    assert np.isfinite(p) and p > 0
+
+
+def test_leave_one_model_out_holds_out_whole_families():
+    rows = bootstrap_rows()
+    out = leave_one_model_out(rows, l2=1e-2, seed=0, n_members=4)
+    families = sorted({r["model"] for r in rows})
+    assert sorted(k for k in out if k != "overall") == families
+    assert out["overall"]["n"] == len(rows)
+    for fam in families:
+        assert out[fam]["n"] == sum(r["model"] == fam for r in rows)
+        assert np.isfinite(out[fam]["median_abs_rel_err"])
+    # generalizes across the synthetic fleet: held-out error is bounded
+    assert out["overall"]["median_abs_rel_err"] < 0.5
+
+
+# ---------------------------------------------------------------------------
+# probe-free autotuning
+# ---------------------------------------------------------------------------
+
+def _probe_bomb(*a, **k):
+    raise AssertionError("model mode must never run a measured probe")
+
+
+def test_autotune_model_mode_runs_zero_probes_and_is_bit_exact(tmp_path):
+    cm = _mlp_compiled()
+    predictor = WaveCostPredictor.fit_rows(bootstrap_rows(), l2=1e-2,
+                                           seed=0, n_members=4)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-127, 128, (6, 490)), jnp.int32)
+    y_before = np.asarray(cm.offline(x))
+    cfg = autotune_model(cm, batch=32, mode="model", predictor=predictor,
+                         probe=_probe_bomb, directory=str(tmp_path),
+                         force=True)
+    # a full config, zero wall-clock reads
+    assert cfg.source == "predicted"
+    assert cfg.version == CONFIG_VERSION
+    assert cfg.probe_ms is None and cfg.seed_stage_ms is None
+    assert cfg.block_mn_probe == {}
+    assert cfg.micro_batch >= 1 and cfg.block_h is not None
+    assert cfg.block_mn            # dense blocks still planned (pure model)
+    # every candidate was priced by the predictor, none probed
+    assert all("predicted_wave_ms" in c and "probe_ms" not in c
+               for c in cfg.candidates)
+    assert cfg.segment_mode_model["predicted_ms"].keys() == {
+        "megakernel", "staged"}
+    # deterministic: same model + same predictor -> identical config
+    again = autotune_model(cm, batch=32, mode="model", predictor=predictor,
+                           probe=_probe_bomb,
+                           directory=str(tmp_path / "b"), force=True)
+    assert again == cfg
+    # the cache round-trips the provenance
+    assert load_config(cfg.key, str(tmp_path)) == cfg
+    # applying the predicted config never changes an output integer
+    cm.apply_tuned(cfg)
+    assert cm.default_micro_batch == cfg.micro_batch
+    np.testing.assert_array_equal(np.asarray(cm.offline(x)), y_before)
+    y_s, st = cm.streaming_compiled(x)
+    assert st.micro_batch == cfg.micro_batch
+    np.testing.assert_allclose(np.asarray(y_s), y_before,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_v3_cache_migrates_by_re_search_and_v4_round_trips(tmp_path):
+    """A v3 cache file (no provenance, no block_mn probe trail) must be
+    ignored — never half-applied with default-filled fields — while v4
+    configs round-trip ``source`` exactly."""
+    v3 = TunedConfig(key="old", platform="cpu", micro_batch=8,
+                     block_h={}, fifo_depths=[2, 2], modeled_cycles=9,
+                     modeled_traffic_bytes=1.0)
+    d = v3.to_dict()
+    d["version"] = 3
+    del d["source"], d["block_mn_probe"]     # what a real v3 file lacks
+    (tmp_path / "old.json").write_text(json.dumps(d))
+    assert load_config("old", str(tmp_path)) is None
+    # v4 round-trip keeps provenance through dict/json/dataclass layers
+    v4 = dataclasses.replace(v3, key="new", source="predicted",
+                             block_mn_probe={"pick": "tuned"})
+    save_config(v4, str(tmp_path))
+    loaded = load_config("new", str(tmp_path))
+    assert loaded == v4 and loaded.source == "predicted"
+    assert TunedConfig.from_dict(v4.to_dict()) == v4
+
+
+def test_autotune_model_mode_rejects_unknown_mode():
+    cm = _mlp_compiled()
+    with pytest.raises(ValueError, match="probe|model"):
+        autotune_model(cm, mode="banana", force=True)
+
+
+# ---------------------------------------------------------------------------
+# cold-start admission: exact discrete-event simulation
+# ---------------------------------------------------------------------------
+
+def _predicted_service(mb=4, predicted_s=0.004):
+    # a real per-sample work term so off-table extrapolation has a shape
+    return PredictedServiceModel.from_table([("s", 4096)],
+                                            {mb: predicted_s})
+
+
+def test_predicted_service_model_prices_before_any_measurement():
+    """A finite, sane admission estimate exists before the server has ever
+    completed (or even submitted) a wave — the whole cold-start point."""
+    service = _predicted_service(mb=4, predicted_s=0.004)
+    assert service.wave_service_s(4) == pytest.approx(0.004)
+    # off-table sizes extrapolate along the FIFO shape, monotonically
+    assert service.wave_service_s(8) > service.wave_service_s(4)
+    assert service.wave_service_s(1) < service.wave_service_s(4)
+    ctl = SLOController(p99_budget_ms=20.0, service=service)
+    est = ctl.estimated_latency_s(backlog_waves=2, micro_batch=4,
+                                  max_wait_s=0.002)
+    assert np.isfinite(est) and est == pytest.approx(0.002 + 3 * 0.004)
+    assert ctl.admit(0.0, 2, 4, 0.002)
+    assert not ctl.admit(0.0, 10, 4, 0.002)   # priced shedding, wave 0
+    # the first measured wave starts correcting the prediction online
+    ctl.observe_service(4, 0.008)
+    assert ctl.wave_service_s(4) > 0.004
+
+
+def test_predicted_service_model_recalibrates_toward_measured():
+    service = _predicted_service(mb=4, predicted_s=0.004)
+    fixed = service.recalibrated(0.006, 4)
+    assert fixed.wave_service_s(4) == pytest.approx(0.006)
+    assert fixed.calibration["dispatch_overhead_ratio"] == pytest.approx(1.5)
+    # off-table extrapolation scales with the same correction
+    assert fixed.wave_service_s(8) == pytest.approx(
+        service.wave_service_s(8) * 1.5)
+
+
+def _cold_start_sim(priced: bool):
+    clock = ManualClock()
+    mb, true_s = 4, 0.004
+    pool = scripted_pool(clock, [true_s], micro_batch=mb)
+    router = Router(
+        {"m": pool},
+        RouterConfig(max_wait_ms=2.0, micro_batch=mb,
+                     p99_budget_ms=14.0 if priced else None),
+        clock=clock,
+        service_models={"m": _predicted_service(mb, 0.0035)} if priced
+        else None,
+        engine=AsyncEngine())
+    trace = poisson_trace(qps=2.5 * mb / true_s, n=160, seed=5)
+    reqs = router.run_trace(
+        "m", trace, lambda i: np.full((2,), i % 100, np.int32))
+    served = [r for r in reqs if not r.shed]
+    lats = np.asarray([r.latency_s for r in served]) * 1e3
+    return {"shed": [bool(r.shed) for r in reqs],
+            "done_t": [r.done_t for r in served],
+            "p99_ms": float(np.percentile(lats, 99))}
+
+
+def test_cold_start_admission_is_priced_and_byte_reproducible():
+    """Under 2.5x overload the predictor-priced run sheds from wave 0 and
+    holds the p99 inside the budget; the unpriced status quo (no service
+    model for an unmeasured model) queues everything and blows through it.
+    Both are ManualClock discrete-event sims: re-running is bit-identical."""
+    priced = _cold_start_sim(priced=True)
+    unpriced = _cold_start_sim(priced=False)
+    assert any(priced["shed"])            # admission control engaged early
+    assert not any(unpriced["shed"])      # status quo: nothing sheds
+    assert priced["p99_ms"] <= 14.0 < unpriced["p99_ms"]
+    # exact reproducibility, field for field, no tolerance
+    again = _cold_start_sim(priced=True)
+    assert again == priced
